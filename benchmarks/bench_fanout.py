@@ -1,0 +1,33 @@
+"""Fig. 14: effect of sampler fanout (5/10/15) on TTA and peak accuracy."""
+
+from __future__ import annotations
+
+from repro.core import default_strategies, peak_accuracy
+
+from .common import QUICK, FULL, emit, graph_for, quick_mode, \
+    run_strategy, target_margin, \
+    summarize, tta
+
+FANOUTS = (5, 10, 15)
+STRATS = ("E", "OP", "OPP", "OPG")
+
+
+def main():
+    mode = QUICK if quick_mode() else FULL
+    g, bs = graph_for("reddit")
+    for fanout in FANOUTS:
+        results = {}
+        for sname in STRATS:
+            strat = default_strategies()[sname]
+            _, stats = run_strategy(g, bs, strat, fanout=fanout,
+                                    rounds=mode["rounds"])
+            results[sname] = stats
+        target = min(peak_accuracy(s) for s in results.values()) - target_margin()
+        for sname, stats in results.items():
+            s = summarize(stats)
+            emit(f"fanout/reddit/f{fanout}/{sname}", s,
+                 f"peak={s['peak_acc']:.4f};tta_s={tta(stats, target):.2f}")
+
+
+if __name__ == "__main__":
+    main()

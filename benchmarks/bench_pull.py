@@ -1,0 +1,50 @@
+"""Fig. 12: pull-phase prefetch analysis on Products — nodes per
+on-demand RPC, RPC service time, and total pull time vs batch size for
+OPP_T0 / OPP_T25 / OPP_R25."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Strategy
+
+from .common import QUICK, FULL, emit, graph_for, quick_mode, run_strategy, \
+    summarize
+
+
+def variants():
+    base = dict(overlap_push=True, retention_limit=4)
+    return {
+        "T0": Strategy("OPP_T0", prefetch_frac=0.0, **base),
+        "T25": Strategy("OPP_T25", prefetch_frac=0.25, **base),
+        "R25": Strategy("OPP_R25", prefetch_frac=0.25, random_subset=True,
+                        **base),
+    }
+
+
+def main():
+    mode = QUICK if quick_mode() else FULL
+    gname = "products" if not quick_mode() else "reddit"
+    g, bs = graph_for(gname)
+    for name, strat in variants().items():
+        _, stats = run_strategy(g, bs, strat, rounds=mode["rounds"])
+        s = summarize(stats)
+        sizes = np.concatenate([np.asarray(st.pull_rpc_sizes, np.int64)
+                                for st in stats]) \
+            if any(st.pull_rpc_sizes for st in stats) else np.zeros(1)
+        emit(f"pull/{gname}/{name}", s,
+             f"rpc_med_nodes={np.median(sizes):.0f};"
+             f"rpc_p90_nodes={np.percentile(sizes, 90):.0f};"
+             f"dyn_s={s['dyn_pull']:.3f};pull_s={s['pull']:.3f}")
+
+    # Fig. 12d: total pull time vs batch size (T25)
+    for bs2 in (64, 128, 256, 512):
+        _, stats = run_strategy(g, bs2, variants()["T25"],
+                                rounds=max(3, mode["rounds"] // 2))
+        s = summarize(stats)
+        emit(f"pull_batch/{gname}/bs{bs2}", s,
+             f"pull_total_s={s['pull'] + s['dyn_pull']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

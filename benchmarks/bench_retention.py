@@ -1,0 +1,34 @@
+"""Fig. 10: retention-limit (P_i) ablation with uniform random pruning —
+per-round time, peak accuracy, embeddings stored at the server."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import Strategy
+
+from .common import FULL, QUICK, emit, graph_for, quick_mode, run_strategy, \
+    summarize
+
+LIMITS = (0, 2, 4, 8, None)   # P_0 (=D) … P_inf (=EmbC)
+
+
+def main():
+    mode = QUICK if quick_mode() else FULL
+    for gname in mode["graphs"]:
+        g, bs = graph_for(gname)
+        for limit in LIMITS:
+            if limit == 0:
+                strat = Strategy(f"P_0", use_embeddings=False)
+            else:
+                strat = Strategy(f"P_{limit}", retention_limit=limit)
+            _, stats = run_strategy(g, bs, strat, rounds=mode["rounds"])
+            s = summarize(stats)
+            tag = "inf" if limit is None else limit
+            emit(f"retention/{gname}/P_{tag}", s,
+                 f"peak={s['peak_acc']:.4f};stored={s['stored']};"
+                 f"pull={s['pull']:.3f};push={s['push']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

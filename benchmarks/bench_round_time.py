@@ -1,0 +1,26 @@
+"""Fig. 7: median round time and its pull/train/dynamic-pull/push
+components per strategy per graph."""
+
+from __future__ import annotations
+
+from repro.core import default_strategies
+
+from .common import FULL, QUICK, emit, graph_for, quick_mode, run_strategy, \
+    summarize
+
+
+def main():
+    mode = QUICK if quick_mode() else FULL
+    for gname in mode["graphs"]:
+        g, bs = graph_for(gname)
+        for sname, strat in default_strategies().items():
+            _, stats = run_strategy(g, bs, strat, rounds=mode["rounds"])
+            s = summarize(stats)
+            emit(f"round_time/{gname}/{sname}", s,
+                 f"pull={s['pull']:.3f};train={s['train']:.3f};"
+                 f"dyn={s['dyn_pull']:.3f};push={s['push']:.3f};"
+                 f"stored={s['stored']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig. 13: client scaling (4 → 6 → 8 clients) for the main strategies."""
+
+from __future__ import annotations
+
+from repro.core import default_strategies, peak_accuracy
+
+from .common import QUICK, FULL, emit, graph_for, quick_mode, \
+    run_strategy, target_margin, \
+    summarize, tta
+
+CLIENTS = (4, 6, 8)
+STRATS = ("E", "O", "OPP", "OPG")
+
+
+def main():
+    mode = QUICK if quick_mode() else FULL
+    graphs = ("reddit",) if quick_mode() else ("reddit", "products")
+    for gname in graphs:
+        g, bs = graph_for(gname)
+        for k in CLIENTS:
+            results = {}
+            for sname in STRATS:
+                strat = default_strategies()[sname]
+                _, stats = run_strategy(g, bs, strat, clients=k,
+                                        rounds=mode["rounds"])
+                results[sname] = stats
+            target = min(peak_accuracy(s) for s in results.values()) - target_margin()
+            for sname, stats in results.items():
+                s = summarize(stats)
+                emit(f"scaling/{gname}/k{k}/{sname}", s,
+                     f"peak={s['peak_acc']:.4f};"
+                     f"tta_s={tta(stats, target):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 11: scored-pruning ablation on the dense graph — EmbC baseline,
+random-25% (R25), top-f% frequency (T5..T75), bridge/degree centrality
+(B25/D25); peak accuracy + TTA."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import Strategy, default_strategies, peak_accuracy
+
+from .common import QUICK, FULL, emit, graph_for, quick_mode, \
+    run_strategy, target_margin, \
+    summarize, tta
+
+
+def variants():
+    base = dict(overlap_push=True, retention_limit=4)
+    out = {"E": Strategy("E")}
+    out["R25"] = Strategy("OPG_R25", scored_prune_frac=0.25,
+                          random_subset=True, **base)
+    for f in (5, 25, 50, 75):
+        out[f"T{f}"] = Strategy(f"OPG_T{f}", scored_prune_frac=f / 100,
+                                **base)
+    out["B25"] = Strategy("OPG_B25", scored_prune_frac=0.25,
+                          score_kind="bridge", **base)
+    out["D25"] = Strategy("OPG_D25", scored_prune_frac=0.25,
+                          score_kind="degree", **base)
+    return out
+
+
+def main():
+    mode = QUICK if quick_mode() else FULL
+    convs = ("graphconv",) if quick_mode() else ("graphconv", "sageconv")
+    g, bs = graph_for("reddit")
+    for conv in convs:
+        results = {}
+        for name, strat in variants().items():
+            _, stats = run_strategy(g, bs, strat, rounds=mode["rounds"],
+                                    conv=conv)
+            results[name] = stats
+        target = min(peak_accuracy(s) for s in results.values()) - target_margin()
+        for name, stats in results.items():
+            s = summarize(stats)
+            emit(f"scoring/{conv}/reddit/{name}", s,
+                 f"peak={s['peak_acc']:.4f};tta_s={tta(stats, target):.2f}")
+
+
+if __name__ == "__main__":
+    main()

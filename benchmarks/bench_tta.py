@@ -1,0 +1,44 @@
+"""Fig. 6/8 (GraphConv) & Fig. 9 (SAGEConv): time-to-accuracy, peak
+accuracy, and convergence curves for D/E/O/P/OP/OPP/OPG."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import default_strategies, peak_accuracy
+
+from .common import (target_margin, FULL, QUICK, emit, graph_for, quick_mode, run_strategy,
+                     summarize, tta)
+
+
+def run(*, conv: str = "graphconv", curves: bool = False):
+    mode = QUICK if quick_mode() else FULL
+    strategies = default_strategies()
+    for gname in mode["graphs"]:
+        g, bs = graph_for(gname)
+        results = {}
+        for sname, strat in strategies.items():
+            _, stats = run_strategy(g, bs, strat, rounds=mode["rounds"],
+                                    conv=conv)
+            results[sname] = stats
+        # target = within 1% of the min peak accuracy across strategies
+        # that use embeddings (paper §5.2)
+        peaks = [peak_accuracy(s) for s in results.values()]
+        target = min(peaks) - target_margin()
+        for sname, stats in results.items():
+            s = summarize(stats)
+            emit(f"tta/{conv}/{gname}/{sname}", s,
+                 f"peak={s['peak_acc']:.4f};tta_s={tta(stats, target):.2f}")
+            if curves:
+                accs = ";".join(f"{st.accuracy:.4f}" for st in stats)
+                print(f"curve/{conv}/{gname}/{sname},0,{accs}", flush=True)
+
+
+def main():
+    run(conv="graphconv", curves=True)
+    if not quick_mode():
+        run(conv="sageconv")
+
+
+if __name__ == "__main__":
+    main()

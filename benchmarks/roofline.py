@@ -1,0 +1,165 @@
+"""Roofline analysis (deliverable g) from the dry-run artifacts.
+
+Reads results/dryrun.json (produced by ``repro.launch.dryrun --all``) and
+derives, per (arch × shape) on the single-pod mesh, three per-chip terms:
+
+  compute term    = census_FLOPs / peak_FLOP/s
+  memory term     = max(analytic_min_HBM_traffic, …) / HBM_bw
+  collective term = census_collective_bytes / ICI link bw
+
+Sources & caveats (measured on this container, see EXPERIMENTS.md):
+  * ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so for
+    scanned models it under-reports by the loop trip product.  We instead
+    use ``repro.launch.hlo_census`` — a loop-aware walk of the partitioned
+    HLO that multiplies each computation by its execution count
+    (calibrated to match cost_analysis exactly on loop-free programs).
+  * The census HBM proxy (sum of top-level instruction results) counts
+    VMEM-resident temporaries and is a loose upper bound; the *memory
+    term* therefore uses a first-principles minimum-traffic model
+    (weights re-read per microbatch, saved activations written+read once,
+    KV cache streamed per decode step) — the classic napkin-roofline
+    numerator — with the census bound reported alongside.
+
+Also reported: MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
+(forward-only), the useful/compiled ratio (catches remat/dispatch waste),
+the dominant term, and a one-line "what moves it".
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.steps import default_microbatches
+
+RESULTS = pathlib.Path("results/dryrun.json")
+DEVICES_SINGLE = 256
+
+
+def model_flops_per_chip(arch: str, shape_name: str, devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        total = 6.0 * n * shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        total = 2.0 * n * shape.seq_len * shape.global_batch
+    else:
+        total = 2.0 * n * shape.global_batch
+    return total / devices
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, devices: int) -> float:
+    """First-principles minimum HBM traffic per chip per step."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    p_dev = cfg.param_count() * 2 / devices            # bf16 weights
+    d = cfg.d_model
+    if shape.kind == "train":
+        mb = default_microbatches(cfg, shape)
+        tokens_dev = shape.seq_len * shape.global_batch / devices
+        act = 2 * cfg.num_layers * tokens_dev * d * 2  # saved resid w+r
+        return 2 * p_dev * mb + 6 * p_dev + act
+    if shape.kind == "prefill":
+        tokens_dev = shape.seq_len * shape.global_batch / devices
+        return p_dev + 2 * cfg.num_layers * tokens_dev * d * 2
+    # decode: read active weights once + stream the KV cache
+    p_act = cfg.active_param_count() * 2 / devices
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * d
+        nh = d_in // cfg.ssm_head_dim
+        cache = (cfg.num_layers * shape.global_batch
+                 * nh * cfg.ssm_head_dim * cfg.ssm_state * 4) / devices
+    elif cfg.kv_lora_rank:
+        t = min(shape.seq_len, 8192 if shape_name == "long_500k" else
+                shape.seq_len)
+        cache = (cfg.num_layers * shape.global_batch * t
+                 * (cfg.kv_lora_rank + cfg.qk_rope_head_dim) * 2) / devices
+    else:
+        window = cfg.sliding_window
+        t = min(shape.seq_len, window) if window else shape.seq_len
+        if shape_name == "long_500k" and not window:
+            t = min(shape.seq_len, 8192)
+        kvh = max(cfg.num_kv_heads, 1)
+        dh = cfg.resolved_head_dim
+        cache = (cfg.num_layers * shape.global_batch * t
+                 * 2 * kvh * dh * 2) / devices
+    return p_act + cache
+
+
+def analyse(records: list[dict], mesh: str = "single") -> list[dict]:
+    rows = []
+    for r in records:
+        if r["mesh"] != mesh or not r.get("ok") or r.get("variant"):
+            continue
+        cen = r.get("census", {})
+        flops = cen.get("flops") or r["flops"]
+        coll = cen.get("collective_total",
+                       r["collectives"]["total"])
+        hbm_min = analytic_hbm_bytes(r["arch"], r["shape"], r["devices"])
+        ct = flops / PEAK_FLOPS_BF16
+        mt = hbm_min / HBM_BW
+        lt = coll / ICI_BW
+        terms = {"compute": ct, "memory": mt, "collective": lt}
+        dom = max(terms, key=terms.get)
+        mf = model_flops_per_chip(r["arch"], r["shape"], r["devices"])
+        ratio = mf / flops if flops > 0 else float("nan")
+        note = {
+            "compute": "raise arithmetic efficiency: cheaper remat policy, "
+                       "causal-skip in blocked attention, fewer dispatch "
+                       "FLOPs",
+            "memory": "cut HBM traffic: fewer weight re-reads "
+                      "(microbatches), smaller saved activations, "
+                      "quantized cache",
+            "collective": "reshard to shrink per-layer all-gathers / "
+                          "overlap collectives with compute (the paper's "
+                          "§4.2 push-overlap, applied to ICI)",
+        }[dom]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": ct, "memory_s": mt, "collective_s": lt,
+            "dominant": dom, "model_flops": mf, "census_flops": flops,
+            "useful_ratio": ratio,
+            "hbm_census_gib": cen.get("hbm_bytes", 0) / 2**30,
+            "mem_gib": (r["memory"].get("argument_size_in_bytes", 0)
+                        + r["memory"].get("temp_size_in_bytes", 0)) / 2**30,
+            "note": note,
+        })
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful/HLO | args+temp GiB | what moves it |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['mem_gib']:.1f} | {r['note']} |")
+    return "\n".join(out)
+
+
+def main():
+    if not RESULTS.exists():
+        print("roofline,0,missing-results-run-dryrun-first")
+        return
+    records = json.loads(RESULTS.read_text())
+    rows = analyse(records)
+    for r in rows:
+        dom_s = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}[r["dominant"]]
+        print(f"roofline/{r['arch']}/{r['shape']},{dom_s * 1e6:.0f},"
+              f"dominant={r['dominant']};useful_ratio={r['useful_ratio']:.2f};"
+              f"mem_gib={r['mem_gib']:.1f}", flush=True)
+    if "--markdown" in sys.argv:
+        print()
+        print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default is quick mode (small
+round counts, 2 graphs); pass ``--full`` for the paper-scale sweep used
+in EXPERIMENTS.md.  The roofline section reads results/dryrun.json — run
+``python -m repro.launch.dryrun --all`` first for fresh numbers.
+"""
+
+from __future__ import annotations
+
+from . import (bench_fanout, bench_fedopt, bench_pull, bench_retention,
+               bench_round_time, bench_scaling, bench_scoring, bench_tta,
+               roofline)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for mod, tag in (
+        (bench_tta, "Fig6/8 TTA+peak+convergence"),
+        (bench_round_time, "Fig7 round-time components"),
+        (bench_retention, "Fig10 retention ablation"),
+        (bench_scoring, "Fig11 scoring ablation"),
+        (bench_pull, "Fig12 pull prefetch analysis"),
+        (bench_scaling, "Fig13 client scaling"),
+        (bench_fanout, "Fig14 fanout"),
+        (bench_fedopt, "Beyond-paper: federated LLM delta pruning/overlap"),
+        (roofline, "Roofline (deliverable g)"),
+    ):
+        print(f"# --- {tag} ---", flush=True)
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

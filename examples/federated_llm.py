@@ -1,0 +1,62 @@
+"""The paper's systems ideas on the transformer zoo (DESIGN.md §3):
+cross-silo federated training with delta pruning + stale aggregation.
+
+Two silos train a reduced smollm on disjoint synthetic shards; we compare
+  dense  — FedAvg every round (EmbC analogue: ship everything)
+  pruned — top-10% magnitude delta sparsification (§4.1 analogue)
+  stale  — pruned + one-round-stale aggregation (§4.2 overlap analogue)
+and report loss + bytes shipped per round.
+
+Run:  PYTHONPATH=src python examples/federated_llm.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.core.fedopt import FedOptConfig, FederatedLMTrainer
+from repro.data import synthetic_batches
+from repro.optim import adamw
+
+
+def stack_silo_batches(cfg, num_silos, local_steps, batch, seq, seed):
+    gens = [synthetic_batches(cfg, batch=batch, seq=seq, seed=seed + 31 * s)
+            for s in range(num_silos)]
+
+    while True:
+        per_silo = []
+        for g in gens:
+            steps = [next(g) for _ in range(local_steps)]
+            per_silo.append(jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *steps))
+        yield jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_silo)
+
+
+def run(name, fed_cfg, rounds=6):
+    cfg = get_reduced("smollm-360m")
+    tr = FederatedLMTrainer(cfg, adamw(2e-3), fed_cfg)
+    gen = stack_silo_batches(cfg, fed_cfg.num_silos, fed_cfg.local_steps,
+                             batch=2, seq=32, seed=0)
+    losses = []
+    for r in range(rounds):
+        m = tr.round(next(gen))
+        losses.append(m["loss"])
+    mb = tr.comm_bytes_per_round() / 2**20
+    print(f"{name:7s} loss {losses[0]:.3f} -> {losses[-1]:.3f}   "
+          f"~{mb:.2f} MiB shipped/round (x{fed_cfg.num_silos} silos)")
+    return losses
+
+
+def main():
+    print("federated LLM training, 2 silos x 4 local steps:")
+    run("dense", FedOptConfig(num_silos=2, local_steps=4))
+    run("pruned", FedOptConfig(num_silos=2, local_steps=4,
+                               delta_topk_frac=0.10))
+    run("stale", FedOptConfig(num_silos=2, local_steps=4,
+                              delta_topk_frac=0.10, stale_aggregation=True))
+    print("\npruned ships ~10% of the bytes; stale hides the aggregation "
+          "behind the next round's compute (one-round staleness, §4.2).")
+
+
+if __name__ == "__main__":
+    main()

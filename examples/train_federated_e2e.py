@@ -1,0 +1,58 @@
+"""End-to-end driver (deliverable b): full federated GNN training session.
+
+The paper's workload, end to end: a Products-like graph partitioned onto
+4 clients, pre-training bootstrap, 30 federated rounds of 3 local epochs
+under the best OptimES strategy (OPG), with per-round accuracy/timing
+logs, a final TTA report against the EmbC baseline, and (measured
+compute + modelled 1 Gbps network) phase breakdowns.
+
+Run:  PYTHONPATH=src python examples/train_federated_e2e.py [--rounds N]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core import default_strategies, FederatedGNNTrainer, \
+    peak_accuracy, time_to_accuracy
+from repro.graphs import make_graph
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--conv", choices=("graphconv", "sageconv"),
+                    default="graphconv")
+    args = ap.parse_args()
+
+    graph = make_graph("products", scale=0.4, seed=1)
+    print(f"graph: V={graph.num_vertices} E={graph.num_edges} "
+          f"avg_deg={graph.avg_degree():.1f}")
+
+    strategies = default_strategies()
+    runs = {}
+    for name in ("E", "OPG"):
+        print(f"\n=== strategy {name}: {strategies[name].describe()} ===")
+        tr = FederatedGNNTrainer(graph, args.clients, strategies[name],
+                                 conv=args.conv, batch_size=256, seed=0)
+        stats = tr.train(args.rounds, verbose=True)
+        runs[name] = stats
+
+    target = min(peak_accuracy(s) for s in runs.values()) - 0.01
+    print(f"\n=== summary (target acc {target:.4f}) ===")
+    for name, stats in runs.items():
+        t = time_to_accuracy(stats, target)
+        rt = float(np.median([s.round_time for s in stats]))
+        print(f"{name:4s} peak={peak_accuracy(stats):.4f} "
+              f"median_round={rt:.2f}s "
+              f"TTA={t if t is not None else float('nan'):.1f}s")
+    e, o = runs["E"], runs["OPG"]
+    te, to = time_to_accuracy(e, target), time_to_accuracy(o, target)
+    if te and to:
+        print(f"\nOptimES(OPG) reaches target {te / to:.2f}x faster than "
+              f"EmbC — the paper reports ≈3.6x for Products (Fig. 6b).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Checkpointing: flat-npz pytree snapshots with a JSON manifest.
+
+No external deps (orbax unavailable offline).  Leaves are saved as
+``<idx>.npy`` entries inside one .npz; the manifest records the treedef
+(via jax.tree_util serialization of key paths), dtypes and shapes, so a
+restore can rebuild the exact pytree and validate compatibility.
+Sharded restore: pass ``like=`` (a pytree of arrays or ShapeDtypeStructs
+with shardings) and each leaf is device_put onto its target sharding.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_pytree(path: str | pathlib.Path, tree: Any, *, step: int = 0,
+                extra: Optional[dict] = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    paths, leaves, _ = _flatten(tree)
+    # npz has no native bfloat16 — store extended dtypes as f32 and let the
+    # manifest dtype drive the restore cast.
+    def _np(l):
+        a = np.asarray(l)
+        return a.astype(np.float32) if a.dtype.kind == "V" or \
+            str(a.dtype) == "bfloat16" else a
+
+    arrays = {f"leaf_{i}": _np(l) for i, l in enumerate(leaves)}
+    np.savez(path.with_suffix(".npz"), **arrays)
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "extra": extra or {},
+    }
+    path.with_suffix(".json").write_text(json.dumps(manifest))
+
+
+def load_pytree(path: str | pathlib.Path, like: Any) -> tuple[Any, dict]:
+    """Restore into the structure of ``like`` (arrays or ShapeDtypeStructs;
+    leaves with .sharding are device_put accordingly)."""
+    path = pathlib.Path(path)
+    manifest = json.loads(path.with_suffix(".json").read_text())
+    data = np.load(path.with_suffix(".npz"))
+    paths, leaves, treedef = _flatten(like)
+    assert paths == manifest["paths"], "checkpoint/model structure mismatch"
+    out = []
+    for i, leaf in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        assert list(arr.shape) == manifest["shapes"][i]
+        target_dtype = getattr(leaf, "dtype", arr.dtype)
+        jarr = jax.numpy.asarray(arr).astype(target_dtype)
+        sharding = getattr(leaf, "sharding", None)
+        out.append(jax.device_put(jarr, sharding) if sharding is not None
+                   else jarr)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+# convenience aliases
+save = save_pytree
+restore = load_pytree

@@ -1,0 +1,94 @@
+"""In-memory embedding server (the paper's Redis KV store).
+
+Stores the h^1..h^{L-1} embeddings of every registered boundary vertex in
+one table ("database" in the paper's Redis terms) per layer, keyed by
+global vertex id.  Clients interact through batched ``push``/``pull``
+calls whose network cost is accounted by a :class:`NetworkModel` — get/set
+RPCs are batched + pipelined exactly as §5.1 describes.
+
+The server is honest-but-curious: it only ever sees (vertex id →
+embedding vector); raw features (h^0) are never registered.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .cost_model import NetworkModel, TransferLog
+
+
+class EmbeddingServer:
+    def __init__(self, num_layers: int, hidden: int,
+                 net: NetworkModel | None = None):
+        assert num_layers >= 2, "embedding sharing needs L >= 2"
+        self.L = num_layers
+        self.hidden = hidden
+        self.net = net or NetworkModel()
+        self._row: dict[int, int] = {}         # global id -> row
+        self._tables: list[np.ndarray] = [
+            np.zeros((0, hidden), np.float32) for _ in range(num_layers - 1)
+        ]
+        self.log = TransferLog()
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, global_ids: np.ndarray) -> None:
+        """Make rows for vertices whose embeddings will be shared."""
+        new = [int(g) for g in np.unique(global_ids) if int(g) not in self._row]
+        if not new:
+            return
+        base = len(self._row)
+        for i, gid in enumerate(new):
+            self._row[gid] = base + i
+        grow = np.zeros((len(new), self.hidden), np.float32)
+        self._tables = [np.concatenate([t, grow], axis=0) for t in self._tables]
+
+    @property
+    def num_embeddings_stored(self) -> int:
+        """Vertices registered × (L-1) layer tables (Fig. 2a marker)."""
+        return len(self._row) * (self.L - 1)
+
+    def memory_bytes(self) -> int:
+        return sum(t.nbytes for t in self._tables)
+
+    def _rows(self, global_ids: np.ndarray) -> np.ndarray:
+        return np.fromiter((self._row[int(g)] for g in global_ids),
+                           dtype=np.int64, count=len(global_ids))
+
+    # -- RPC surface ---------------------------------------------------------
+
+    def push(self, global_ids: np.ndarray,
+             layer_values: list[np.ndarray]) -> float:
+        """Batched pipelined SET of h^1..h^{L-1} for ``global_ids``.
+
+        ``layer_values[l]`` is an (n, hidden) array for layer l+1.
+        Returns modelled wall time."""
+        assert len(layer_values) == self.L - 1
+        if len(global_ids) == 0:
+            return 0.0
+        rows = self._rows(global_ids)
+        for tbl, vals in zip(self._tables, layer_values):
+            tbl[rows] = np.asarray(vals, np.float32)
+        t = self.net.transfer_time(len(global_ids), self.hidden, self.L - 1)
+        self.log.add(bytes=self.net.embedding_bytes(len(global_ids),
+                                                    self.hidden, self.L - 1),
+                     rpcs=1, embeddings=len(global_ids) * (self.L - 1),
+                     seconds=t)
+        return t
+
+    def pull(self, global_ids: np.ndarray,
+             *, layers: list[int] | None = None) -> tuple[list[np.ndarray], float]:
+        """Batched pipelined GET.  Returns ([per-layer (n, hidden)], time).
+
+        ``layers`` selects which h^l tables to fetch (1-indexed);
+        default all L-1."""
+        sel = layers or list(range(1, self.L))
+        if len(global_ids) == 0:
+            return [np.zeros((0, self.hidden), np.float32) for _ in sel], 0.0
+        rows = self._rows(global_ids)
+        out = [self._tables[l - 1][rows].copy() for l in sel]
+        t = self.net.transfer_time(len(global_ids), self.hidden, len(sel))
+        self.log.add(bytes=self.net.embedding_bytes(len(global_ids),
+                                                    self.hidden, len(sel)),
+                     rpcs=1, embeddings=len(global_ids) * len(sel), seconds=t)
+        return out, t

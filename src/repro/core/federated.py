@@ -1,0 +1,423 @@
+"""Federated GNN training runtime (paper §3) with OptimES strategies (§4).
+
+One process simulates the cross-silo deployment: K client shards train in
+(logical) parallel; the aggregation server FedAvg-aggregates; the
+embedding server mediates remote-embedding exchange.  Compute is
+*measured* (wall clock of jitted steps); network is *modelled* by
+:class:`NetworkModel` — recorded separately per phase, so every paper
+figure can be regenerated.
+
+Numerical faithfulness notes:
+  * The embedding server's content is static within a round (clients pull
+    previous-round values).  Prefetch (§4.3) therefore changes only the
+    *timing*, never the numerics — we fill the client cache at round start
+    and account pull time per-strategy.  Pruning and overlap DO change
+    numerics and are implemented numerically (smaller expanded subgraph;
+    stale epoch-(ε−1) push embeddings).
+  * Round wall time = max over clients (they run in parallel silos)
+    + aggregation/validation (~100 ms in the paper; we measure ours).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.graph import Graph
+from repro.graphs.partition import (ClientShard, bfs_partition,
+                                    make_client_shards)
+from repro.graphs.sampler import NeighborSampler
+from repro.models import gnn
+from repro.optim import Optimizer, adam
+
+from .cost_model import NetworkModel
+from .embedding_server import EmbeddingServer
+from .pruning import score_remote_nodes, top_fraction
+from .strategies import Strategy
+
+
+@dataclasses.dataclass
+class PhaseTimes:
+    pull: float = 0.0
+    train: float = 0.0
+    dynamic_pull: float = 0.0   # §4.3 on-demand pulls (hatched blue stack)
+    push_compute: float = 0.0
+    push_transfer: float = 0.0
+    agg: float = 0.0
+
+    def client_total(self, *, overlap: bool, interference: float,
+                     epochs: int) -> float:
+        """Wall time for one client's round under the §4.2 timeline."""
+        push = self.push_compute + self.push_transfer
+        train = self.train + self.dynamic_pull
+        if overlap and epochs >= 2:
+            last_epoch = train / epochs
+            head = train - last_epoch
+            return self.pull + head + max(last_epoch * interference, push)
+        return self.pull + train + push
+
+
+@dataclasses.dataclass
+class RoundStats:
+    round_idx: int
+    accuracy: float
+    round_time: float
+    cum_time: float
+    phases: PhaseTimes                       # max over clients per phase
+    pull_rpc_sizes: list[int]                # nodes per dynamic-pull RPC
+    embeddings_stored: int
+    train_loss: float
+
+
+def time_to_accuracy(stats: list[RoundStats], target: float,
+                     *, smooth: int = 5) -> Optional[float]:
+    """Cumulative time when the ``smooth``-round moving average accuracy
+    first reaches ``target`` (paper §5.2 metric)."""
+    accs = [s.accuracy for s in stats]
+    for i in range(len(accs)):
+        lo = max(0, i - smooth + 1)
+        if np.mean(accs[lo: i + 1]) >= target:
+            return stats[i].cum_time
+    return None
+
+
+def peak_accuracy(stats: list[RoundStats]) -> float:
+    return max(s.accuracy for s in stats) if stats else 0.0
+
+
+class FederatedGNNTrainer:
+    def __init__(
+        self,
+        graph: Graph,
+        num_clients: int,
+        strategy: Strategy,
+        *,
+        conv: str = "graphconv",
+        num_layers: int = 3,
+        hidden: int = 32,
+        fanout: int = 5,
+        batch_size: int = 64,
+        epochs_per_round: int = 3,
+        lr: float = 1e-2,
+        optimizer: Optimizer | None = None,
+        net: NetworkModel | None = None,
+        seed: int = 0,
+        part: np.ndarray | None = None,
+    ):
+        self.g = graph
+        self.k = num_clients
+        self.strategy = strategy
+        self.conv = conv
+        self.L = num_layers
+        self.hidden = hidden
+        self.fanout = fanout
+        self.batch_size = batch_size
+        self.epochs = epochs_per_round
+        self.lr = lr
+        self.opt = optimizer or adam(lr)
+        self.net = net or NetworkModel()
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.part = bfs_partition(graph, num_clients, seed=seed) \
+            if part is None else part
+        self._setup()
+
+    # -- setup ----------------------------------------------------------------
+
+    def _setup(self) -> None:
+        st = self.strategy
+        limit = 0 if not st.use_embeddings else st.retention_limit
+        shards = make_client_shards(self.g, self.part,
+                                    retention_limit=limit, seed=self.seed)
+
+        # score-based pruning (§4.1.2): keep top-f% pull nodes per client,
+        # scored on the (retention-pruned) expanded subgraph.  Same seed ⇒
+        # the same retention edges survive before the set filter applies.
+        if st.use_embeddings and st.scored_prune_frac is not None:
+            retained2 = {}
+            for sh in shards:
+                scores = score_remote_nodes(sh, st.score_kind, self.L)
+                keep = top_fraction(scores, st.scored_prune_frac,
+                                    rng=self.rng,
+                                    random_subset=st.random_subset)
+                retained2[sh.client_id] = sh.pull_nodes[keep]
+            shards = make_client_shards(self.g, self.part,
+                                        retention_limit=limit,
+                                        retained_remote=retained2,
+                                        seed=self.seed)
+        self.shards = shards
+
+        # push sets follow the *retained* pull sets: client k pushes exactly
+        # the nodes other clients retained (pruning shrinks pushes, §4.1.1).
+        part = self.part
+        for sh in shards:
+            wanted = [other.pull_nodes[part[other.pull_nodes] == sh.client_id]
+                      for other in shards if other.client_id != sh.client_id]
+            sh.push_nodes = np.unique(np.concatenate(wanted)) \
+                if wanted else np.zeros(0, np.int64)
+
+        # prefetch scores (§4.3) on the final expanded shard
+        self.prefetch_sets: list[np.ndarray] = []
+        for sh in shards:
+            if st.use_embeddings and st.prefetch_frac is not None:
+                scores = score_remote_nodes(sh, st.score_kind, self.L)
+                idx = top_fraction(scores, st.prefetch_frac, rng=self.rng,
+                                   random_subset=st.random_subset)
+            else:
+                idx = np.arange(len(sh.pull_nodes))
+            self.prefetch_sets.append(idx)
+
+        # embedding server
+        self.server = EmbeddingServer(self.L, self.hidden, self.net) \
+            if st.use_embeddings else None
+        if self.server is not None:
+            for sh in shards:
+                self.server.register(sh.pull_nodes)
+                self.server.register(sh.push_nodes)
+
+        self.samplers = [
+            NeighborSampler(sh, self.fanout, self.L, self.batch_size,
+                            seed=self.seed)
+            for sh in shards
+        ]
+        self.shard_arrays = [gnn.shard_to_arrays(sh) for sh in shards]
+        self.feats = [jnp.asarray(sh.features, jnp.float32) for sh in shards]
+        self.labels = [jnp.asarray(sh.labels, jnp.int32) for sh in shards]
+
+        # global eval graph (aggregation server's held-out test set):
+        # full-neighbourhood forward over the whole graph.
+        e_dst = np.repeat(np.arange(self.g.num_vertices),
+                          np.diff(self.g.indptr))
+        self.eval_arrays = {
+            "edge_src": jnp.asarray(self.g.indices, jnp.int32),
+            "edge_dst": jnp.asarray(e_dst, jnp.int32),
+            "src_is_remote": jnp.zeros(self.g.num_edges, bool),
+            "num_local": self.g.num_vertices,
+            "features": jnp.asarray(self.g.features, jnp.float32),
+        }
+        self.test_idx = np.nonzero(~self.g.train_mask)[0]
+
+        # model + jitted train step
+        self.params = gnn.init_gnn(jax.random.PRNGKey(self.seed), self.conv,
+                                   self.g.feat_dim, self.hidden,
+                                   self.g.num_classes, self.L)
+        opt = self.opt
+
+        def _step(params, opt_state, batch, features, caches, labels):
+            loss, grads = jax.value_and_grad(
+                functools.partial(gnn.loss_fn, conv=self.conv))(
+                    params, batch, features, caches, labels)
+            params, opt_state = opt.step(params, grads, opt_state)
+            return params, opt_state, loss
+
+        self._train_step = jax.jit(_step)
+        self._caches: list[list[jnp.ndarray]] = [
+            [jnp.zeros((max(1, sh.num_remote), self.hidden), jnp.float32)
+             for _ in range(self.L - 1)]
+            for sh in shards
+        ]
+
+    # -- embedding exchange helpers ---------------------------------------------
+
+    def _fill_cache(self, ci: int) -> None:
+        """Materialise this round's pull-node embeddings into the client
+        cache (numerics; timing handled separately)."""
+        sh = self.shards[ci]
+        if self.server is None or len(sh.pull_nodes) == 0:
+            return
+        rows = self.server._rows(sh.pull_nodes)
+        self._caches[ci] = [
+            jnp.asarray(np.concatenate([
+                self.server._tables[l][rows],
+                np.zeros((max(1, sh.num_remote) - sh.num_remote,
+                          self.hidden), np.float32)]))
+            if sh.num_remote else self._caches[ci][l]
+            for l in range(self.L - 1)
+        ]
+
+    def _pull_time(self, ci: int, minibatches) -> tuple[float, float, list[int]]:
+        """(upfront pull s, dynamic pull s, nodes-per-dynamic-RPC sizes)."""
+        sh = self.shards[ci]
+        st = self.strategy
+        if self.server is None or len(sh.pull_nodes) == 0:
+            return 0.0, 0.0, []
+        if st.prefetch_frac is None:
+            _, t = self.server.pull(sh.pull_nodes)
+            return t, 0.0, []
+        # §4.3: batched prefetch of top-x% + per-minibatch on-demand RPCs.
+        pre = self.prefetch_sets[ci]
+        _, t_pre = self.server.pull(sh.pull_nodes[pre])
+        present = [np.zeros(sh.num_remote, bool) for _ in range(self.L - 1)]
+        for p in present:
+            p[pre] = True
+        t_dyn, sizes = 0.0, []
+        for mb in minibatches:
+            need = 0
+            for l, used in enumerate(mb.remote_slots_used):
+                miss = used[~present[l][used]]
+                need += len(miss)
+                present[l][miss] = True
+            if need:
+                t = self.net.transfer_time(need, self.hidden, 1)
+                self.server.log.add(
+                    bytes=self.net.embedding_bytes(need, self.hidden, 1),
+                    rpcs=1, embeddings=need, seconds=t)
+                t_dyn += t
+                sizes.append(need)
+        return t_pre, t_dyn, sizes
+
+    def _compute_push(self, ci: int, params) -> tuple[list[np.ndarray], float, float]:
+        """Forward pass for push-node embeddings (§3.2.2 push phase).
+        Returns (per-layer values, compute s, transfer s)."""
+        sh = self.shards[ci]
+        if self.server is None or len(sh.push_nodes) == 0:
+            return [], 0.0, 0.0
+        t0 = time.perf_counter()
+        outs = gnn.full_propagate(params, self.shard_arrays[ci],
+                                  self._caches[ci], conv=self.conv)
+        jax.block_until_ready(outs)
+        t_compute = time.perf_counter() - t0
+        g2l = {int(g): i for i, g in enumerate(sh.global_ids[:sh.num_local])}
+        rows = np.fromiter((g2l[int(g)] for g in sh.push_nodes), np.int64,
+                           len(sh.push_nodes))
+        vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
+        t_transfer = self.net.transfer_time(len(sh.push_nodes), self.hidden,
+                                            self.L - 1)
+        return vals, t_compute, t_transfer
+
+    # -- lifecycle ---------------------------------------------------------------
+
+    def pretrain_round(self) -> None:
+        """§3.2.1: initialise push-node embeddings on the unexpanded local
+        subgraphs (remote neighbours masked) and seed the server."""
+        if self.server is None:
+            return
+        for ci, sh in enumerate(self.shards):
+            if len(sh.push_nodes) == 0:
+                continue
+            outs = gnn.full_propagate(self.params, self.shard_arrays[ci],
+                                      None, conv=self.conv)
+            g2l = {int(g): i for i, g in enumerate(sh.global_ids[:sh.num_local])}
+            rows = np.fromiter((g2l[int(g)] for g in sh.push_nodes), np.int64,
+                               len(sh.push_nodes))
+            vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
+            self.server.push(sh.push_nodes, vals)
+
+    def evaluate(self) -> float:
+        outs = gnn.full_propagate(self.params, self.eval_arrays, None,
+                                  conv=self.conv)
+        pred = np.asarray(jnp.argmax(outs[-1], axis=-1))
+        return float((pred[self.test_idx] ==
+                      self.g.labels[self.test_idx]).mean())
+
+    def run_round(self, round_idx: int, cum_time: float) -> RoundStats:
+        st = self.strategy
+        phases = PhaseTimes()
+        client_times: list[float] = []
+        all_rpc_sizes: list[int] = []
+        new_params, weights, losses = [], [], []
+        push_payloads: list[tuple[int, list[np.ndarray]]] = []
+
+        for ci, sh in enumerate(self.shards):
+            p = PhaseTimes()
+            self._fill_cache(ci)
+            # pre-sample the round's minibatches (sampling is part of the
+            # measured train phase, like DGL's dataloader)
+            t0 = time.perf_counter()
+            epochs_batches = [list(self.samplers[ci].epoch())
+                              for _ in range(self.epochs)]
+            sample_t = time.perf_counter() - t0
+            p.pull, p.dynamic_pull, sizes = self._pull_time(
+                ci, [mb for ep in epochs_batches for mb in ep])
+            all_rpc_sizes += sizes
+
+            params = self.params
+            opt_state = self.opt.init(params)
+            t_train = sample_t
+            push_vals: list[np.ndarray] = []
+            loss = jnp.zeros(())
+            for e, batches in enumerate(epochs_batches, start=1):
+                t0 = time.perf_counter()
+                for mb in batches:
+                    batch = gnn.blocks_to_arrays(mb)
+                    params, opt_state, loss = self._train_step(
+                        params, opt_state, batch, self.feats[ci],
+                        self._caches[ci], self.labels[ci])
+                jax.block_until_ready(loss)
+                t_train += time.perf_counter() - t0
+                if st.overlap_push and e == self.epochs - 1:
+                    # §4.2: stale push computed from the epoch-(ε−1) model
+                    push_vals, p.push_compute, p.push_transfer = \
+                        self._compute_push(ci, params)
+            if not st.overlap_push or self.epochs < 2:
+                push_vals, p.push_compute, p.push_transfer = \
+                    self._compute_push(ci, params)
+            p.train = t_train
+            client_times.append(p.client_total(
+                overlap=st.overlap_push,
+                interference=st.overlap_interference, epochs=self.epochs))
+            if self.server is not None and len(sh.push_nodes):
+                push_payloads.append((ci, push_vals))
+            new_params.append(params)
+            weights.append(float(len(sh.train_vertices())))
+            losses.append(float(loss))
+            for name in ("pull", "train", "dynamic_pull", "push_compute",
+                         "push_transfer"):
+                setattr(phases, name, max(getattr(phases, name),
+                                          getattr(p, name)))
+
+        # all clients pulled before anyone pushes (server is static
+        # within the round) — apply pushes now.
+        for ci, vals in push_payloads:
+            self.server.push(self.shards[ci].push_nodes, vals)
+
+        # FedAvg + validation on the aggregation server.
+        t0 = time.perf_counter()
+        wsum = sum(weights)
+        self.params = jax.tree_util.tree_map(
+            lambda *ps: sum(w * p for w, p in zip(weights, ps)) / wsum,
+            *new_params)
+        acc = self.evaluate()
+        t_agg = time.perf_counter() - t0 \
+            + 2 * self.net.model_transfer_time(self._num_params())
+        phases.agg = t_agg
+
+        round_time = max(client_times) + t_agg
+        return RoundStats(
+            round_idx=round_idx,
+            accuracy=acc,
+            round_time=round_time,
+            cum_time=cum_time + round_time,
+            phases=phases,
+            pull_rpc_sizes=all_rpc_sizes,
+            embeddings_stored=0 if self.server is None
+            else self.server.num_embeddings_stored,
+            train_loss=float(np.mean(losses)),
+        )
+
+    def train(self, num_rounds: int, *, verbose: bool = False
+              ) -> list[RoundStats]:
+        self.pretrain_round()
+        stats: list[RoundStats] = []
+        cum = 0.0
+        for r in range(num_rounds):
+            s = self.run_round(r, cum)
+            cum = s.cum_time
+            stats.append(s)
+            if verbose:
+                print(f"  round {r:3d} acc={s.accuracy:.4f} "
+                      f"loss={s.train_loss:.3f} t={s.round_time:.3f}s "
+                      f"(pull {s.phases.pull:.3f} train {s.phases.train:.3f} "
+                      f"dyn {s.phases.dynamic_pull:.3f} "
+                      f"push {s.phases.push_compute + s.phases.push_transfer:.3f})")
+        return stats
+
+    def _num_params(self) -> int:
+        return sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(self.params))

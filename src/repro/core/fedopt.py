@@ -1,0 +1,140 @@
+"""Federated optimization of the architecture zoo — the paper's systems
+ideas mapped onto the multi-pod mesh (DESIGN.md §3/§4).
+
+Cross-silo federated learning of a transformer: each *silo* (pod) runs
+``local_steps`` of training on its own data shard, then silos aggregate.
+The three OptimES levers transfer directly:
+
+  * prune what you communicate  → top-k magnitude sparsification of the
+    model delta before cross-silo aggregation (§4.1 analogue; the
+    frequency-score pruning of boundary embeddings becomes magnitude
+    scoring of parameter deltas);
+  * overlap communication with the compute tail → ``stale_aggregation``:
+    round r applies the aggregate of round r-1's deltas, so the
+    cross-pod all-reduce overlaps the next round's local steps (§4.2's
+    stale-push, with the same one-round staleness trade);
+  * batched exchange through a server → the aggregation is a mean over
+    the silo axis (a ``pod``-axis psum at TPU scale; a stacked-leading-
+    dim mean here, which GSPMD lowers to exactly that when the leading
+    dim is sharded over 'pod').
+
+Everything is pure JAX: silo-stacked params (leading dim = num_silos),
+``vmap`` for local steps, so the same code runs on 1 CPU device (tests,
+examples) and on the (pod, data, model) production mesh (dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class FedOptConfig:
+    num_silos: int
+    local_steps: int = 4
+    delta_topk_frac: Optional[float] = None   # None = dense deltas (EmbC-ish)
+    stale_aggregation: bool = False           # §4.2 overlap analogue
+
+
+def replicate(tree: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+
+def _topk_sparsify(delta: Any, frac: float) -> tuple[Any, float]:
+    """Keep the top-``frac`` magnitude entries per leaf (threshold via
+    per-leaf quantile — the sort-free analogue of kernels/topk_mask).
+    Returns (sparse delta, kept fraction actually communicated)."""
+    kept_n, total_n = 0.0, 0.0
+
+    def one(d):
+        nonlocal kept_n, total_n
+        if d.ndim == 0:
+            return d
+        mag = jnp.abs(d.astype(jnp.float32))
+        thr = jnp.quantile(mag.reshape(-1), 1.0 - frac)
+        mask = mag >= thr
+        kept_n += float(frac) * d.size
+        total_n += d.size
+        return jnp.where(mask, d, 0).astype(d.dtype)
+
+    out = jax.tree_util.tree_map(one, delta)
+    return out, (kept_n / max(total_n, 1.0))
+
+
+class FederatedLMTrainer:
+    """Driver for federated training of any zoo architecture.
+
+    Holds silo-stacked params/optimizer state and an ``anchor`` (the last
+    agreed global model).  ``round(batches)`` = local_steps per silo +
+    aggregation (possibly stale, possibly sparsified)."""
+
+    def __init__(self, model_cfg, optimizer: Optimizer, fed: FedOptConfig,
+                 rng=None):
+        self.cfg = model_cfg
+        self.opt = optimizer
+        self.fed = fed
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        anchor = lm.init_params(rng, model_cfg)
+        self.anchor = anchor
+        self.params = replicate(anchor, fed.num_silos)
+        self.opt_state = jax.vmap(optimizer.init)(self.params)
+        self.pending_delta = None                   # stale-aggregation buffer
+        self.comm_fraction = 1.0
+        inner = lm.make_train_step(model_cfg, optimizer)
+
+        def silo_round(params, opt_state, batches):
+            """local_steps of training on one silo.  batches: pytree with
+            leading (local_steps, ...) dims."""
+            def body(carry, b):
+                p, s = carry
+                p, s, m = inner(p, s, b)
+                return (p, s), m["loss"]
+
+            (params, opt_state), losses = jax.lax.scan(
+                body, (params, opt_state), batches)
+            return params, opt_state, losses.mean()
+
+        self._silo_round = jax.jit(jax.vmap(silo_round))
+
+    def round(self, batches: Any) -> dict:
+        """batches: pytree with leading (num_silos, local_steps, ...)."""
+        fed = self.fed
+        self.params, self.opt_state, losses = self._silo_round(
+            self.params, self.opt_state, batches)
+        delta = jax.tree_util.tree_map(
+            lambda p, a: (p - a[None]).mean(axis=0), self.params,
+            self.anchor)
+        if fed.delta_topk_frac is not None:
+            delta, self.comm_fraction = _topk_sparsify(
+                delta, fed.delta_topk_frac)
+
+        if fed.stale_aggregation:
+            # apply LAST round's aggregate now; ship this round's delta
+            # while the next round trains (one-round staleness, §4.2)
+            apply_delta = self.pending_delta
+            self.pending_delta = delta
+        else:
+            apply_delta = delta
+
+        if apply_delta is not None:
+            self.anchor = jax.tree_util.tree_map(
+                lambda a, d: (a + d.astype(a.dtype)), self.anchor,
+                apply_delta)
+            self.params = replicate(self.anchor, fed.num_silos)
+            self.opt_state = jax.vmap(self.opt.init)(self.params)
+        return {"loss": float(jnp.mean(losses)),
+                "comm_fraction": self.comm_fraction}
+
+    def comm_bytes_per_round(self) -> int:
+        n = sum(int(jnp.size(p)) * p.dtype.itemsize
+                for p in jax.tree_util.tree_leaves(self.anchor))
+        frac = self.fed.delta_topk_frac or 1.0
+        return int(n * frac)

@@ -1,0 +1,156 @@
+"""Remote-neighbourhood pruning (§4.1) and node scoring.
+
+Two families:
+
+* **Uniform random pruning with retention limit** ``P_i`` (§4.1.1): each
+  local boundary vertex keeps at most ``i`` of its remote in-neighbours,
+  chosen uniformly at random, during subgraph expansion.  ``P_0`` degrades
+  to the default federated GNN (strategy D); ``P_inf`` is EmbC.
+
+* **Score-based pruning** (§4.1.2): remote (pull) nodes are ranked and the
+  top-f% retained.  Scores:
+  - ``frequency``: S(v) = |{x ∈ T : v ∈ N_L(x)}| / |T| — the fraction of
+    training vertices with v inside their L-hop in-neighbourhood, computed
+    offline on the expanded subgraph (paths terminate at remote vertices,
+    which holds structurally here because remote rows have no in-edges).
+  - ``degree``: in-degree of the remote vertex as seen by this client.
+  - ``bridge``: degree-based bridging coefficient × ego betweenness proxy
+    (full betweenness is O(VE); the paper computes these offline too, and
+    only their *ranking* matters for pruning).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.graph import Graph
+from repro.graphs.partition import ClientShard
+
+
+# -- retention-limit pruning ------------------------------------------------
+
+def retention_pruned_sets(
+    g: Graph,
+    part: np.ndarray,
+    limit: int | None,
+    *,
+    seed: int = 0,
+) -> dict[int, np.ndarray] | None:
+    """Per-client retained remote vertex sets under retention limit P_i.
+
+    Returns None for P_inf (no pruning).  Retention is per *boundary
+    vertex*: each local vertex keeps ≤ limit remote in-neighbours; the
+    retained set is the union.  Done offline before loading the subgraph,
+    as in the paper's implementation.
+    """
+    if limit is None:
+        return None
+    rng = np.random.default_rng(seed)
+    k = int(part.max()) + 1
+    retained: dict[int, list[np.ndarray]] = {c: [] for c in range(k)}
+    for u in range(g.num_vertices):
+        c = int(part[u])
+        nbrs = g.neighbours(u)
+        remote = nbrs[part[nbrs] != c]
+        if len(remote) == 0:
+            continue
+        if limit == 0:
+            continue
+        keep = remote if len(remote) <= limit else \
+            rng.choice(remote, size=limit, replace=False)
+        retained[c].append(keep.astype(np.int64))
+    return {
+        c: (np.unique(np.concatenate(v)) if v else np.zeros(0, np.int64))
+        for c, v in retained.items()
+    }
+
+
+# -- scoring ------------------------------------------------------------------
+
+def _reach_counts(shard: ClientShard, num_hops: int) -> np.ndarray:
+    """counts[v] = #train vertices with node v in their ≤num_hops
+    in-neighbourhood of the expanded subgraph."""
+    train = shard.train_vertices()
+    n_total = len(shard.global_ids)
+    t = len(train)
+    if t == 0:
+        return np.zeros(n_total, np.int64)
+    # reach[i, v] — train vertex i reaches v in ≤ h hops (dense bool;
+    # shards are ≤ tens of thousands of vertices at our scale).
+    reach = np.zeros((t, n_total), dtype=bool)
+    reach[np.arange(t), train] = True
+    e_dst = np.repeat(np.arange(shard.num_local), np.diff(shard.indptr))
+    e_src = shard.indices.astype(np.int64)
+    for _ in range(num_hops):
+        new = np.zeros_like(reach)
+        # v reachable next hop if some u with (v -> u) edge is reachable.
+        # Group edges by dst to vectorise the OR-scatter.
+        np.logical_or.at(new.T, e_src, reach[:, e_dst].T)
+        reach |= new
+    return reach.sum(axis=0).astype(np.int64)
+
+
+def frequency_scores(shard: ClientShard, num_hops: int) -> np.ndarray:
+    """S(v) for each remote (pull) slot of the shard (§4.1.2)."""
+    counts = _reach_counts(shard, num_hops)
+    t = max(1, len(shard.train_vertices()))
+    return counts[shard.num_local:] / t
+
+
+def degree_scores(shard: ClientShard) -> np.ndarray:
+    """In-degree centrality of remote vertices as seen locally: number of
+    local vertices each remote vertex feeds into."""
+    n_total = len(shard.global_ids)
+    deg = np.zeros(n_total, np.int64)
+    np.add.at(deg, shard.indices.astype(np.int64), 1)
+    return deg[shard.num_local:].astype(np.float64)
+
+
+def bridge_scores(shard: ClientShard) -> np.ndarray:
+    """Bridging-coefficient proxy for bridge centrality [12].
+
+    BrC(v) ≈ betweenness_proxy(v) × bridging_coefficient(v) with
+    bridging_coefficient(v) = (1/deg v) / Σ_{n∈N(v)} 1/deg(n).  For remote
+    vertices only their local star is visible, so deg(v) is the local
+    in-degree and N(v) the local vertices they feed; the betweenness proxy
+    is that local degree (a remote vertex bridging many local vertices to
+    an unseen community scores high).  Ranking-compatible with the paper's
+    offline centrality exchange.
+    """
+    n_total = len(shard.global_ids)
+    deg = np.zeros(n_total, np.float64)
+    np.add.at(deg, shard.indices.astype(np.int64), 1.0)
+    local_deg = np.maximum(np.diff(shard.indptr).astype(np.float64), 1.0)
+    inv_nbr_sum = np.zeros(n_total, np.float64)
+    e_dst = np.repeat(np.arange(shard.num_local), np.diff(shard.indptr))
+    np.add.at(inv_nbr_sum, shard.indices.astype(np.int64), 1.0 / local_deg[e_dst])
+    d = np.maximum(deg, 1.0)
+    bridging = (1.0 / d) / np.maximum(inv_nbr_sum, 1e-9)
+    return (deg * bridging)[shard.num_local:]
+
+
+def score_remote_nodes(shard: ClientShard, kind: str, num_hops: int) -> np.ndarray:
+    if kind == "frequency":
+        return frequency_scores(shard, num_hops)
+    if kind == "degree":
+        return degree_scores(shard)
+    if kind == "bridge":
+        return bridge_scores(shard)
+    raise KeyError(f"unknown score kind {kind!r}")
+
+
+def top_fraction(scores: np.ndarray, frac: float,
+                 *, rng: np.random.Generator | None = None,
+                 random_subset: bool = False) -> np.ndarray:
+    """Indices of the top ``frac`` of scores (or a random subset of the
+    same size, for the R25-style ablations)."""
+    n = len(scores)
+    k = int(np.ceil(frac * n))
+    if k >= n:
+        return np.arange(n)
+    if random_subset:
+        rng = rng or np.random.default_rng(0)
+        return np.sort(rng.choice(n, size=k, replace=False))
+    # stable top-k: break ties by index for determinism
+    order = np.lexsort((np.arange(n), -scores))
+    return np.sort(order[:k])

@@ -1,0 +1,65 @@
+"""Declarative strategy configurations (paper §5.2 notation).
+
+D    — default federated GNN, no embedding exchange (P_0).
+E    — EmbC baseline: full expansion, blocking pull/push each round.
+O    — E + push overlap (§4.2).
+P    — E + uniform random pruning with retention limit (§4.1.1).
+OP   — O + P.
+OPP  — OP + scored pull pre-fetch (§4.3).
+OPG  — OP + score-based graph pruning to top-f% (§4.1.2).
+
+All knobs are explicit so ablations (P_i sweeps, Tf sweeps, R25/B25/D25)
+are just constructor calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str
+    use_embeddings: bool = True            # False ⇒ default federated GNN
+    overlap_push: bool = False             # §4.2
+    retention_limit: Optional[int] = None  # §4.1.1 P_i; None = P_inf
+    scored_prune_frac: Optional[float] = None  # §4.1.2 top-f%; None = off
+    prefetch_frac: Optional[float] = None  # §4.3 x%; None = pull-all upfront
+    score_kind: str = "frequency"          # frequency | degree | bridge
+    random_subset: bool = False            # R25-style ablation selector
+    # Measured contention: concurrent push slows the final epoch (paper
+    # reports +14–32%, Papers +80s).  Applied when overlap_push is on.
+    overlap_interference: float = 1.18
+
+    def describe(self) -> str:
+        bits = [self.name]
+        if not self.use_embeddings:
+            bits.append("no-embeddings")
+        if self.retention_limit is not None:
+            bits.append(f"P_{self.retention_limit}")
+        if self.scored_prune_frac is not None:
+            sel = "R" if self.random_subset else "T"
+            bits.append(f"{sel}{int(self.scored_prune_frac * 100)}:{self.score_kind}")
+        if self.prefetch_frac is not None:
+            bits.append(f"prefetch_x={int(self.prefetch_frac * 100)}%")
+        if self.overlap_push:
+            bits.append("overlap")
+        return " ".join(bits)
+
+
+def default_strategies(*, retention: int = 4, f: float = 0.25,
+                       x: float = 0.25) -> dict[str, Strategy]:
+    """The seven strategies of Figs. 6–9 with paper-default knobs
+    (P_4 for uniform pruning, f=x=25%)."""
+    return {
+        "D": Strategy("D", use_embeddings=False),
+        "E": Strategy("E"),
+        "O": Strategy("O", overlap_push=True),
+        "P": Strategy("P", retention_limit=retention),
+        "OP": Strategy("OP", overlap_push=True, retention_limit=retention),
+        "OPP": Strategy("OPP", overlap_push=True, retention_limit=retention,
+                        prefetch_frac=x),
+        "OPG": Strategy("OPG", overlap_push=True, retention_limit=retention,
+                        scored_prune_frac=f),
+    }

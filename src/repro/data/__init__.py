@@ -1,0 +1,3 @@
+from .pipeline import synthetic_batches, synthetic_request_stream
+
+__all__ = ["synthetic_batches", "synthetic_request_stream"]

@@ -1,0 +1,60 @@
+"""Deterministic synthetic data pipelines for the architecture zoo.
+
+Offline container ⇒ no real corpora; batches are seeded synthetic token
+streams with a learnable structure (a noisy Markov chain over the vocab)
+so "loss decreases" is meaningful, plus the modality-stub inputs for
+vlm/audio (the allowed carve-out: precomputed patch/frame embeddings).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _markov_tokens(rng: np.random.Generator, vocab: int, batch: int,
+                   seq: int, order_stride: int = 7) -> np.ndarray:
+    """Tokens with predictable structure: t_{i+1} ≈ (a·t_i + b) mod V with
+    noise — a next-token pattern a small model can actually learn."""
+    toks = np.empty((batch, seq), np.int64)
+    toks[:, 0] = rng.integers(0, vocab, batch)
+    noise = rng.random((batch, seq)) < 0.15
+    rand = rng.integers(0, vocab, (batch, seq))
+    for i in range(1, seq):
+        nxt = (toks[:, i - 1] * order_stride + 13) % vocab
+        toks[:, i] = np.where(noise[:, i], rand[:, i], nxt)
+    return toks
+
+
+def synthetic_batches(cfg: ModelConfig, *, batch: int, seq: int,
+                      seed: int = 0) -> Iterator[dict]:
+    rng = np.random.default_rng(seed)
+    while True:
+        toks = _markov_tokens(rng, cfg.vocab_size, batch, seq + 1)
+        out = {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+        if cfg.family == "vlm":
+            out["vision"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.vision_tokens,
+                                     cfg.vision_dim)) * 0.1, jnp.float32
+            ).astype(cfg.dtype)
+        if cfg.family == "audio":
+            out["frames"] = jnp.asarray(
+                rng.standard_normal((batch, cfg.encoder_seq, cfg.d_model))
+                * 0.1, jnp.float32).astype(cfg.dtype)
+        yield out
+
+
+def synthetic_request_stream(cfg: ModelConfig, *, batch: int,
+                             prompt_len: int, seed: int = 0
+                             ) -> Iterator[np.ndarray]:
+    """Batched serve requests: (batch, prompt_len) token prompts."""
+    rng = np.random.default_rng(seed)
+    while True:
+        yield _markov_tokens(rng, cfg.vocab_size, batch, prompt_len)

@@ -1,0 +1,5 @@
+from .sharding import (ShardingRules, batch_specs, cache_specs, opt_specs,
+                       param_specs)
+
+__all__ = ["ShardingRules", "param_specs", "opt_specs", "batch_specs",
+           "cache_specs"]

@@ -1,0 +1,11 @@
+from .graph import Graph, from_edges, induced_subgraph
+from .partition import (ClientShard, bfs_partition, edge_cut, hash_partition,
+                        make_client_shards)
+from .sampler import Block, MiniBatch, NeighborSampler
+from .synthetic import PRESETS, make_graph
+
+__all__ = [
+    "Graph", "from_edges", "induced_subgraph", "ClientShard",
+    "bfs_partition", "hash_partition", "edge_cut", "make_client_shards",
+    "Block", "MiniBatch", "NeighborSampler", "PRESETS", "make_graph",
+]

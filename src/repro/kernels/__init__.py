@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships three parts:
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ref.py    — pure-jnp oracles
+  ops.py    — jit'd dispatchers (use_pallas flag; interpret=True on CPU)
+
+Kernels:
+  gnn_aggregate — ELL-format neighbour mean-aggregation (the forward-pass
+                  hot spot of every mini-batch, §3.2.2)
+  swa_attention — sliding-window decode attention (long_500k serve path)
+  topk_mask     — sort-free top-k selection for frequency-score pruning /
+                  prefetch (§4.1.2, §4.3) at TPU scale
+"""

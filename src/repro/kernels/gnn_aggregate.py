@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: ELL neighbour mean-aggregation.
+
+The per-minibatch forward hot spot of federated GNN training (§3.2.2)
+is gather(neighbour embeddings) → segment-mean.  TPU adaptation (see
+DESIGN.md): the sampled computation graphs are mini-batch sized, so the
+*whole* source embedding table of a block fits VMEM (≤ a few thousand
+rows × 32–256 features).  We therefore tile over destinations and
+feature columns, keep `src_feats` resident in VMEM, and do the gather +
+masked mean per (dst_tile, feat_tile) block — the irregular access stays
+on-chip, HBM traffic is one linear read of the table + one linear write
+of the output.
+
+Layout: adjacency in ELL format (N_dst, K) — fixed fanout K matches the
+paper's sampler (fanout 5), so ELL padding is tiny.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DST_TILE = 128
+FEAT_TILE = 128
+
+
+def _kernel(src_ref, idx_ref, mask_ref, out_ref):
+    """One (dst_tile, feat_tile) block.
+
+    src_ref:  (N_src, FEAT_TILE) — the feature column-slab, whole table
+    idx_ref:  (DST_TILE, K)
+    mask_ref: (DST_TILE, K)
+    out_ref:  (DST_TILE, FEAT_TILE)
+    """
+    idx = idx_ref[...]                                   # (D, K)
+    mask = mask_ref[...]
+    feats = src_ref[...]                                 # (N_src, Ft)
+    gathered = jnp.take(feats, idx.reshape(-1), axis=0)  # (D*K, Ft) VMEM gather
+    gathered = gathered.reshape(idx.shape[0], idx.shape[1], -1)
+    w = mask.astype(feats.dtype)[..., None]
+    s = (gathered * w).sum(axis=1)
+    cnt = mask.sum(axis=1).astype(feats.dtype)
+    out_ref[...] = s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gnn_aggregate(src_feats: jax.Array, ell_idx: jax.Array,
+                  ell_mask: jax.Array, *, interpret: bool = True
+                  ) -> jax.Array:
+    """ELL mean-aggregation.  Shapes as in ref.gnn_aggregate.
+
+    Pads N_dst to DST_TILE and F to FEAT_TILE; N_src stays whole (VMEM
+    resident — mini-batch scale by construction)."""
+    n_dst, k = ell_idx.shape
+    n_src, f = src_feats.shape
+    pd = -n_dst % DST_TILE
+    pf = -f % FEAT_TILE
+    if pd:
+        ell_idx = jnp.pad(ell_idx, [(0, pd), (0, 0)])
+        ell_mask = jnp.pad(ell_mask, [(0, pd), (0, 0)])
+    if pf:
+        src_feats = jnp.pad(src_feats, [(0, 0), (0, pf)])
+    D, F = n_dst + pd, f + pf
+
+    grid = (D // DST_TILE, F // FEAT_TILE)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_src, FEAT_TILE), lambda i, j: (0, j)),
+            pl.BlockSpec((DST_TILE, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((DST_TILE, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((DST_TILE, FEAT_TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((D, F), src_feats.dtype),
+        interpret=interpret,
+    )(src_feats, ell_idx, ell_mask)
+    return out[:n_dst, :f]

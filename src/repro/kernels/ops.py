@@ -1,0 +1,66 @@
+"""Jit'd dispatchers over the Pallas kernels and their jnp oracles.
+
+``use_pallas='auto'`` picks the Pallas path on TPU backends and the pure
+jnp oracle elsewhere; tests force ``use_pallas=True`` with interpret mode
+to validate the kernel bodies on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from . import gnn_aggregate as _agg
+from . import ref
+from . import swa_attention as _swa
+from . import topk_mask as _topk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas) -> tuple[bool, bool]:
+    """→ (use_pallas, interpret)."""
+    if use_pallas == "auto":
+        return (True, False) if _on_tpu() else (False, True)
+    return bool(use_pallas), not _on_tpu()
+
+
+def gnn_aggregate(src_feats, ell_idx, ell_mask, *, use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _agg.gnn_aggregate(src_feats, ell_idx, ell_mask,
+                                  interpret=interp)
+    return ref.gnn_aggregate(src_feats, ell_idx, ell_mask)
+
+
+def swa_attention_decode(q, k, v, kv_pos, kv_valid, q_pos, *, window,
+                         use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _swa.swa_attention_decode(q, k, v, kv_pos, kv_valid, q_pos,
+                                         window=window, interpret=interp)
+    return ref.swa_attention_decode(q, k, v, kv_pos, kv_valid, q_pos,
+                                    window)
+
+
+def topk_mask(scores, k, *, use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _topk.topk_mask(scores, k, interpret=interp)
+    return ref.topk_mask(scores, k)
+
+
+def ell_from_csr(indptr: np.ndarray, indices: np.ndarray, max_deg: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """CSR → ELL (idx, mask), truncating rows past ``max_deg`` (the
+    sampler's fanout bound makes truncation a no-op in practice)."""
+    n = len(indptr) - 1
+    idx = np.zeros((n, max_deg), np.int32)
+    mask = np.zeros((n, max_deg), bool)
+    for u in range(n):
+        row = indices[indptr[u]: indptr[u + 1]][:max_deg]
+        idx[u, : len(row)] = row
+        mask[u, : len(row)] = True
+    return idx, mask

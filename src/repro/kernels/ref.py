@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gnn_aggregate(src_feats: jax.Array, ell_idx: jax.Array,
+                  ell_mask: jax.Array) -> jax.Array:
+    """Mean aggregation over an ELL adjacency.
+
+    src_feats: (N_src, F); ell_idx: (N_dst, K) int32 rows into src_feats;
+    ell_mask: (N_dst, K) bool.  Returns (N_dst, F) mean of valid rows
+    (zeros for isolated vertices).
+    """
+    gathered = src_feats[ell_idx]                       # (N_dst, K, F)
+    w = ell_mask.astype(src_feats.dtype)[..., None]
+    s = (gathered * w).sum(axis=1)
+    cnt = ell_mask.sum(axis=1).astype(src_feats.dtype)
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def swa_attention_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_pos: jax.Array, kv_valid: jax.Array,
+                         q_pos: jax.Array, window: int) -> jax.Array:
+    """Single-token sliding-window attention.
+
+    q: (B, H, dh); k/v: (B, T, Hkv, dh); kv_pos/kv_valid: (B, T);
+    q_pos: (B,).  Returns (B, H, dh)."""
+    B, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k) / np.sqrt(dh)
+    mask = kv_valid & (kv_pos <= q_pos[:, None]) \
+        & (kv_pos > q_pos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s.astype(jnp.float32), -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v)
+    return out.reshape(B, H, dh)
+
+
+def topk_mask(scores: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k largest entries (ties broken towards keeping
+    ≥ k entries — the threshold semantics the bisection kernel provides)."""
+    if k <= 0:
+        return jnp.zeros(scores.shape, bool)
+    if k >= scores.shape[0]:
+        return jnp.ones(scores.shape, bool)
+    kth = jnp.sort(scores)[-k]
+    return scores >= kth

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: sliding-window decode attention.
+
+Serves the long_500k path: one query token against a ring-buffer KV
+cache of `window` slots.  Per grid cell (batch b, kv-head h) the whole
+window of K and V for that head lives in VMEM (8192 × 256 × bf16 ≈ 4 MiB
+— within the 16 MiB v5e VMEM), scores and softmax stay on-chip, and the
+two matmuls hit the MXU with a 128-aligned window dimension.
+
+This is the TPU-native replacement for the generic jnp decode path;
+`ref.swa_attention_decode` is the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, valid_ref, qpos_ref, out_ref,
+            *, window: int):
+    """Blocks: q (1,1,G,dh); k/v (1,1,T,dh); pos/valid (1,T); qpos (1,1);
+    out (1,1,G,dh)."""
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (T, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    dh = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / np.sqrt(dh)
+    qp = qpos_ref[0, 0]
+    pos = pos_ref[0, :]
+    ok = valid_ref[0, :] & (pos <= qp) & (pos > qp - window)
+    s = jnp.where(ok[None, :], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32
+                            ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def swa_attention_decode(q, k, v, kv_pos, kv_valid, q_pos, *, window: int,
+                         interpret: bool = True):
+    """Shapes as in ref.swa_attention_decode:
+    q (B, H, dh); k/v (B, T, Hkv, dh); kv_pos/kv_valid (B, T); q_pos (B,)."""
+    B, H, dh = q.shape
+    _, T, Hkv, _ = k.shape
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, dh)
+    kk = k.transpose(0, 2, 1, 3)          # (B, Hkv, T, dh)
+    vv = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window),
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, T, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, T), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, T), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype),
+        interpret=interpret,
+    )(qg, kk, vv, kv_pos, kv_valid, q_pos.reshape(B, 1))
+    return out.reshape(B, H, dh)

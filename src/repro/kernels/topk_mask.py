@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: sort-free top-k selection via threshold bisection.
+
+Scored pruning (§4.1.2) and prefetch (§4.3) need "keep the top-f% of
+remote-vertex scores".  At the paper's CPU scale a sort is fine; at TPU
+scale (40M boundary vertices on Papers) a full sort is the wrong tool —
+the selection threshold can be found with a fixed number of *counting*
+passes, each a pure VMEM reduction:
+
+  repeat 24×:  mid = (lo+hi)/2;  c = #(scores ≥ mid)
+               c > k ? lo = mid : hi = mid
+  mask = scores ≥ lo
+
+Each pass tiles the score vector through VMEM (grid over tiles,
+sequential accumulation into an SMEM-like (1,1) partial), so the whole
+selection is O(24·N) streaming reads with no data movement — bandwidth
+bound at roofline, no sort network.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024
+ITERS = 24
+
+
+def _count_kernel(scores_ref, thr_ref, out_ref):
+    """Count entries ≥ thr within one tile; accumulate across the grid.
+    scores (1, TILE); thr (1, 1); out (1, 1) running count."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = jnp.int32(0)
+
+    c = (scores_ref[0, :] >= thr_ref[0, 0]).sum().astype(jnp.int32)
+    out_ref[0, 0] += c
+
+
+def _count_ge(scores2d: jax.Array, thr: jax.Array, *, interpret: bool):
+    n = scores2d.shape[1]
+    return pl.pallas_call(
+        _count_kernel,
+        grid=(n // TILE,),
+        in_specs=[pl.BlockSpec((1, TILE), lambda i: (0, i)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(scores2d, thr.reshape(1, 1))[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_mask(scores: jax.Array, k: int, *, interpret: bool = True
+              ) -> jax.Array:
+    """Boolean mask selecting (at least) the k largest scores.
+
+    Threshold semantics: ties at the k-th value are all kept — identical
+    to ref.topk_mask."""
+    n = scores.shape[0]
+    if k <= 0:
+        return jnp.zeros((n,), bool)
+    if k >= n:
+        return jnp.ones((n,), bool)
+    pad = -n % TILE
+    s2 = jnp.pad(scores.astype(jnp.float32), (0, pad),
+                 constant_values=-jnp.inf).reshape(1, -1)
+
+    lo = jnp.float32(scores.min())
+    hi = jnp.float32(scores.max()) + 1e-6
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        c = _count_ge(s2, mid, interpret=interpret)
+        return jax.lax.cond(c > k, lambda: (mid, hi), lambda: (lo, mid))
+
+    lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo, hi))
+    # lo is the tightest threshold with count > k (or the initial min);
+    # use the count at hi to decide which side matches "at least k".
+    c_hi = _count_ge(s2, hi, interpret=interpret)
+    thr = jnp.where(c_hi >= k, hi, lo)
+    return scores >= thr

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# This file is the ONLY place the 512 placeholder devices are forced —
+# smoke tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape × mesh) combination:
+  lower `train_step`/`prefill`/`serve_step` with production shardings,
+  compile, and record memory_analysis + cost_analysis + the collective
+  bytes parsed from the partitioned HLO.  Failures here (sharding
+  mismatch, OOM at compile, unsupported collective) are bugs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all          # full sweep
+Results are appended to results/dryrun.json (one record per combo).
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.hlo_census import census
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_result_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type like 'f32[16,128]' or a tuple."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum per-partition operand/result bytes of every collective op in the
+    partitioned HLO (the collective roofline numerator)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    ops = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"\S+\s*=\s*((?:\([^)]*\)|\S+))\s+(\S+?)(?:-start)?\(",
+                     line)
+        if not m:
+            continue
+        result_type, opname = m.groups()
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "."):
+                out[c] += _parse_result_bytes(result_type)
+                ops[c] += 1
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["op_counts"] = ops
+    return out
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            *, microbatches=None, seq_parallel=None,
+            fsdp_threshold=5e9, moe_groups=None) -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if moe_groups is not None and cfg.num_experts:
+        cfg = _dc.replace(cfg, moe_groups=moe_groups)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "devices": n_dev, "ok": False}
+    t0 = time.time()
+    try:
+        bundle = build_step(cfg, shape, mesh, microbatches=microbatches,
+                            seq_parallel=seq_parallel,
+                            fsdp_threshold=fsdp_threshold)
+        with mesh:
+            lowered = bundle.lower()
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        coll = collective_bytes(hlo_text)
+        cen = census(hlo_text)
+        rec.update({
+            "ok": True,
+            "lower_compile_s": round(time.time() - t0, 1),
+            "memory": {k: int(getattr(mem, k))
+                       for k in ("argument_size_in_bytes",
+                                 "output_size_in_bytes",
+                                 "temp_size_in_bytes",
+                                 "generated_code_size_in_bytes")
+                       if hasattr(mem, k)},
+            # cost_analysis counts while bodies ONCE (loop-trip blind);
+            # kept for reference.  The census numbers are loop-corrected.
+            "flops": float(cost.get("flops", -1.0)) if cost else -1.0,
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0))
+            if cost else -1.0,
+            "collectives": coll,
+            "census": {"flops": cen["flops"],
+                       "hbm_bytes": cen["hbm_bytes"],
+                       "collective_total": cen["collective_total"],
+                       "collective_bytes": cen["collective_bytes"]},
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "seq_parallel": bundle.rules.seq_parallel,
+            "fsdp": bundle.rules.fsdp,
+        })
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=6)
+        rec["lower_compile_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def append_result(rec: dict, out_path: pathlib.Path):
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    data = []
+    if out_path.exists():
+        data = json.loads(out_path.read_text())
+    # replace any previous record for the same combo+variant
+    key = (rec["arch"], rec["shape"], rec["mesh"], rec.get("variant", ""))
+    data = [d for d in data
+            if (d["arch"], d["shape"], d["mesh"], d.get("variant", "")) != key]
+    data.append(rec)
+    out_path.write_text(json.dumps(data, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-parallel", type=int, default=None,
+                    help="override: 0/1")
+    ap.add_argument("--fsdp-threshold", type=float, default=5e9)
+    ap.add_argument("--moe-groups", type=int, default=None)
+    ap.add_argument("--variant", default="",
+                    help="label for §Perf experiment records")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                for m in ("single", "multi"):
+                    combos.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        combos = [(args.arch, args.shape, args.mesh)]
+
+    out_path = pathlib.Path(args.out)
+    sp = None if args.seq_parallel is None else bool(args.seq_parallel)
+    for arch, shape, meshk in combos:
+        rec = run_one(arch, shape, meshk, microbatches=args.microbatches,
+                      seq_parallel=sp, fsdp_threshold=args.fsdp_threshold,
+                      moe_groups=args.moe_groups)
+        if args.variant:
+            rec["variant"] = args.variant
+        append_result(rec, out_path)
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = "" if rec["ok"] else f"  {rec['error'][:120]}"
+        print(f"{status} {arch:24s} {shape:12s} {meshk:6s} "
+              f"{rec['lower_compile_s']:6.1f}s{extra}", flush=True)
+        if rec["ok"]:
+            mem = rec["memory"]
+            print(f"     mem: args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB  "
+                  f"flops={rec['flops']:.3e}  "
+                  f"coll={rec['collectives']['total']/2**30:.3f}GiB", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# ^ placeholder devices, same contract as dryrun.py (first lines, see there).
+
+"""Federated multi-pod dry-run: the paper's technique ON the pod axis.
+
+Lowers + compiles one federated round of `core.fedopt` for the multi-pod
+mesh with the silo dimension sharded over `pod`: each pod trains its own
+silo replica for `local_steps`, then the delta aggregation is the
+cross-pod collective.  This is the OptimES mapping of DESIGN.md §3 made
+concrete: the embedding/model exchange that EmbC routes through a server
+becomes a `pod`-axis mean; delta top-k sparsification is the §4.1 pruning
+analogue (communicated bytes scale with the kept fraction).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.fedrun --arch smollm-360m \
+      [--local-steps 4] [--topk 0.1]
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed import sharding as sh
+from repro.launch.hlo_census import census
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import adamw
+
+
+def build_fed_round(cfg, mesh, *, local_steps: int, topk: float | None,
+                    batch: int, seq: int):
+    """One jittable federated round over silo-stacked state.
+
+    Returns (fn, in_shardings, abstract_inputs)."""
+    n_pods = mesh.shape["pod"]
+    rules = sh.make_rules(mesh, cfg)
+    opt = adamw(1e-3)
+    inner = lm.make_train_step(cfg, opt)
+
+    def silo_round(params, opt_state, batches):
+        def body(carry, b):
+            p, s = carry
+            p, s, m = inner(p, s, b)
+            return (p, s), m["loss"]
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), batches)
+        return params, opt_state, losses.mean()
+
+    def fed_round(stacked_params, stacked_opt, anchor, batches):
+        params, opt_state, loss = jax.vmap(silo_round)(
+            stacked_params, stacked_opt, batches)
+        delta = jax.tree_util.tree_map(
+            lambda p, a: (p - a[None]).mean(axis=0), params, anchor)
+        if topk:
+            def sparsify(d):
+                if d.ndim == 0:
+                    return d
+                mag = jnp.abs(d.astype(jnp.float32))
+                thr = jnp.quantile(mag.reshape(-1), 1.0 - topk)
+                return jnp.where(mag >= thr, d, 0).astype(d.dtype)
+            delta = jax.tree_util.tree_map(sparsify, delta)
+        new_anchor = jax.tree_util.tree_map(
+            lambda a, d: a + d.astype(a.dtype), anchor, delta)
+        return new_anchor, loss.mean()
+
+    # shapes/shardings: silo dim over 'pod'; within a silo the params use
+    # the standard (data, model) rules
+    pshapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0),
+                                                    cfg))
+    pspecs = sh.param_specs(rules, pshapes)
+
+    def pod_stack_spec(spec):
+        inner_spec = [ax for ax in spec]
+        # drop 'pod' from any dp tuples inside, then lead with 'pod'
+        cleaned = []
+        for ax in inner_spec:
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if a != "pod") or None
+                if ax is not None and len(ax) == 1:
+                    ax = ax[0]
+            cleaned.append(ax)
+        return NamedSharding(mesh, P(*(("pod",) + tuple(cleaned))))
+
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((n_pods,) + l.shape, l.dtype), tree)
+    stacked_pspecs = jax.tree_util.tree_map(
+        pod_stack_spec, pspecs, is_leaf=lambda x: isinstance(x, P))
+    oshapes = jax.eval_shape(opt.init, pshapes)
+    ospecs = sh.opt_specs(rules, oshapes, pspecs)
+    stacked_ospecs = jax.tree_util.tree_map(
+        pod_stack_spec, ospecs, is_leaf=lambda x: isinstance(x, P))
+    anchor_specs = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    batches = {
+        "tokens": jax.ShapeDtypeStruct((n_pods, local_steps, batch, seq),
+                                       jnp.int32),
+        "labels": jax.ShapeDtypeStruct((n_pods, local_steps, batch, seq),
+                                       jnp.int32),
+    }
+    bspec = {k: NamedSharding(mesh, P("pod", None, "data", None))
+             for k in batches}
+    return (fed_round,
+            (stacked_pspecs, stacked_ospecs, anchor_specs, bspec),
+            (stack(pshapes), stack(oshapes), pshapes, batches))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="smollm-360m")
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--topk", type=float, default=None)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=1024)
+    ap.add_argument("--out", default="results/fedrun.json")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=True)
+    fn, shardings, inputs = build_fed_round(
+        cfg, mesh, local_steps=args.local_steps, topk=args.topk,
+        batch=args.batch, seq=args.seq)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=shardings).lower(
+            *inputs).compile()
+    mem = compiled.memory_analysis()
+    cen = census(compiled.as_text())
+    rec = {
+        "arch": args.arch, "local_steps": args.local_steps,
+        "topk": args.topk,
+        "args_gib": mem.argument_size_in_bytes / 2**30,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+        "census_flops": cen["flops"],
+        "collective_total": cen["collective_total"],
+        "collective_bytes": cen["collective_bytes"],
+    }
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    data = json.loads(out.read_text()) if out.exists() else []
+    data.append(rec)
+    out.write_text(json.dumps(data, indent=1))
+    print(f"OK fed_round {args.arch} local_steps={args.local_steps} "
+          f"topk={args.topk}")
+    print(f"   args={rec['args_gib']:.2f}GiB temp={rec['temp_gib']:.2f}GiB "
+          f"coll={rec['collective_total']/50e9:.2f}s "
+          f"flops={rec['census_flops']/197e12:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

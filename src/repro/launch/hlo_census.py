@@ -1,0 +1,270 @@
+"""Loop-aware census of a partitioned HLO module.
+
+``compiled.cost_analysis()`` counts each while-loop *body* once, so for
+scanned models (layer scan × microbatch scan × attention KV scan) FLOPs,
+bytes and collective payloads are under-reported by the product of trip
+counts.  This module parses the HLO text, recovers each loop's trip count
+from its condition computation, propagates multipliers through the call
+graph, and produces execution-weighted totals:
+
+  flops            — 2·M·N·K per dot (einsums lower to dots), × trips
+  hbm_bytes        — operand+result bytes of top-level instructions per
+                     computation (fusion boundaries ≈ materialisation
+                     points), × trips
+  collective_bytes — result bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute,
+                     × trips
+
+All quantities are per-partition (the HLO is post-SPMD).
+Calibration: for an unscanned matmul this reproduces cost_analysis
+exactly; for a scanned 2-layer model it reports 2× the body (verified in
+tests/test_roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "u64": 8, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\s]+?))\s+"
+    r"([\w\-]+)\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    text: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    types: dict[str, str]           # symbol -> result type (incl. params)
+    is_entry: bool = False
+
+
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*((?:\([^()]*\)|\w+\[[\d,]*\]"
+                       r"(?:\{[\d,]*\})?))")
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("->" in line) and ("{" in line):
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {},
+                                  is_entry=line.lstrip().startswith("ENTRY"))
+                # header parameter types: "(name: type, name: type)"
+                hdr = line[line.index("("):]
+                for pname, ptype in _PARAM_RE.findall(hdr.split("->")[0]):
+                    cur.types[pname] = ptype
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2).strip(), m.group(3), line)
+            cur.instrs.append(ins)
+            cur.types[ins.name] = ins.result_type
+    return comps
+
+
+def _called(instr: Instr) -> list[tuple[str, str]]:
+    """(kind, computation) pairs invoked by this instruction."""
+    out = []
+    for attr in ("condition", "body", "calls", "to_apply",
+                 "branch_computations"):
+        m = re.search(attr + r"=\{?%?([\w\.\-, %]+)\}?", instr.text)
+        if m:
+            for name in m.group(1).split(","):
+                out.append((attr, name.strip().lstrip("%")))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover the loop bound from the condition computation.
+
+    XLA canonical counted loops compare the induction variable against an
+    s32 constant; in scheduled dumps the compare is often wrapped in a
+    kLoop fusion whose constant operand lives in the condition
+    computation, so we take the largest plausible integer constant there.
+    Falls back to 1 (cost_analysis semantics) when absent."""
+    best = 0
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.text)
+            if m:
+                v = int(m.group(1))
+                if 0 < v < 10_000_000:
+                    best = max(best, v)
+    return best if best else 1
+
+
+def _dot_flops(instr: Instr, types: dict[str, str]) -> float:
+    """2 × (product of result dims) × (product of contraction dims).
+    Operand types are resolved through the computation's symbol table
+    (scheduled dumps don't inline operand types)."""
+    shapes = _shape_dims(instr.result_type)
+    if not shapes:
+        return 0.0
+    _, rdims = shapes[0]
+    result_elems = 1
+    for d in rdims:
+        result_elems *= d
+    lhs_dims: list[int] = []
+    rest = instr.text.split(instr.op + "(", 1)
+    if len(rest) == 2:
+        first = rest[1].split(",")[0].strip().rstrip(")")
+        m = re.match(r"%?([\w\.\-]+)", first)
+        if m and m.group(1) in types:
+            sh = _shape_dims(types[m.group(1)])
+            if sh:
+                lhs_dims = sh[0][1]
+        else:
+            m2 = re.search(r"(\w+\[[\d,]*\])", first)
+            if m2:
+                sh = _shape_dims(m2.group(1))
+                if sh:
+                    lhs_dims = sh[0][1]
+    mdim = re.search(r"lhs_contracting_dims=\{([\d,]+)\}", instr.text)
+    contraction = 1
+    if mdim and lhs_dims:
+        for ax in mdim.group(1).split(","):
+            ax = int(ax)
+            if ax < len(lhs_dims):
+                contraction *= lhs_dims[ax]
+    return 2.0 * result_elems * contraction
+
+
+def _operand_bytes(instr: Instr, types: dict[str, str]) -> int:
+    """Total bytes of the instruction's operands (symbol-table resolved)."""
+    rest = instr.text.split(instr.op + "(", 1)
+    if len(rest) != 2:
+        return 0
+    args = rest[1].split(")")[0]
+    total = 0
+    for tok in args.split(","):
+        m = re.match(r"\s*%?([\w\.\-]+)", tok)
+        if m and m.group(1) in types:
+            total += _type_bytes(types[m.group(1)])
+    return total
+
+
+def census(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0,
+                "collective_bytes": {c: 0.0 for c in COLLECTIVES},
+                "collective_total": 0.0}
+
+    # multipliers per computation: DFS from entry through call sites
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(comp: Computation, m: float):
+        mult[comp.name] += m
+        for ins in comp.instrs:
+            calls = _called(ins)
+            if ins.op == "while":
+                body = next((n for k, n in calls if k == "body"), None)
+                cond = next((n for k, n in calls if k == "condition"), None)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                if cond in comps:
+                    visit(comps[cond], m * (trips + 1))
+                if body in comps:
+                    visit(comps[body], m * trips)
+            elif ins.op in ("fusion",):
+                continue  # fusion internals are not HBM/collective events
+            elif ins.op in ("conditional",):
+                for k, n in calls:
+                    if n in comps:
+                        visit(comps[n], m)  # assume each branch once
+            else:
+                for k, n in calls:
+                    if k in ("calls", "to_apply") and n in comps:
+                        visit(comps[n], m)
+
+    visit(entry, 1.0)
+
+    flops = 0.0
+    hbm = 0.0
+    coll = {c: 0.0 for c in COLLECTIVES}
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, comp.types)
+            if ins.op in ("parameter", "constant", "get-tuple-element",
+                          "tuple", "bitcast"):
+                continue
+            hbm += m * _type_bytes(ins.result_type)
+            for c in COLLECTIVES:
+                if ins.op == c or ins.op.startswith(c + "."):
+                    # wire-byte semantics: ring all-reduce moves ~2× the
+                    # full tensor per chip; all-gather moves the gathered
+                    # result; reduce-scatter moves the full OPERAND.
+                    rb = _type_bytes(ins.result_type)
+                    ob = _operand_bytes(ins, comp.types)
+                    wire = max(rb, ob) * (2 if c == "all-reduce" else 1)
+                    coll[c] += m * wire
+                    break
+    # fusions: count dot flops inside fusion bodies at the caller's rate
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                called = _called(ins)
+                for k, n in called:
+                    if k == "calls" and n in comps:
+                        sub_c = comps[n]
+                        for sub in sub_c.instrs:
+                            if sub.op == "dot":
+                                flops += m * _dot_flops(sub, sub_c.types)
+    return {"flops": flops, "hbm_bytes": hbm,
+            "collective_bytes": coll,
+            "collective_total": sum(coll.values())}

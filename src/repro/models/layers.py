@@ -1,0 +1,422 @@
+"""Transformer building blocks shared by the architecture zoo.
+
+Conventions: activations are (B, S, D); attention internals (B, S, H, dh);
+KV caches (B, T, Hkv, dh) with an int32 write index.  Softmax statistics
+are float32 regardless of param dtype.
+
+Attention is *blocked* over the KV axis with an online-softmax
+``lax.scan`` (flash-attention recurrence in stock XLA) so that prefill at
+32k and train at 4k never materialise (S × S) score tensors.  The Pallas
+sliding-window kernel in ``repro.kernels.swa_attention`` implements the
+same contract for TPU; ``repro.kernels.ops`` dispatches between them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# -- initialisers --------------------------------------------------------------
+
+def dense_init(rng, shape, dtype, *, scale: float | None = None):
+    fan_in = shape[0] if len(shape) <= 2 else int(np.prod(shape[:-1]))
+    s = scale if scale is not None else (1.0 / np.sqrt(fan_in))
+    return (jax.random.normal(rng, shape, jnp.float32) * s).astype(dtype)
+
+
+def maybe_bias(cfg: ModelConfig, shape):
+    return jnp.zeros(shape, cfg.dtype) if cfg.use_bias else None
+
+
+def add_bias(x, b):
+    return x if b is None else x + b
+
+
+# -- norms ----------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rms_norm(x, z, weight, eps: float = 1e-5):
+    """Mamba2 output norm: RMSNorm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    weight, eps)
+
+
+# -- rotary embeddings -----------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float, *, head_axis: bool = True):
+    """x: (..., S, H, dh) if head_axis else (..., S, dh);
+    positions: (..., S) broadcastable against x's leading dims."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    if head_axis:
+        angles = angles[..., None, :]                  # (..., S, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs -------------------------------------------------------------------------
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: int):
+    D = cfg.d_model
+    k = jax.random.split(rng, 3)
+    p = {"w_out": dense_init(k[0], (d_ff, D), cfg.dtype),
+         "b_out": maybe_bias(cfg, (D,)),
+         "w_in": dense_init(k[1], (D, d_ff), cfg.dtype),
+         "b_in": maybe_bias(cfg, (d_ff,))}
+    if cfg.activation == "silu_gated":
+        p["w_gate"] = dense_init(k[2], (D, d_ff), cfg.dtype)
+    return p
+
+
+def mlp(p, cfg: ModelConfig, x):
+    h = add_bias(x @ p["w_in"], p.get("b_in"))
+    if cfg.activation == "silu_gated":
+        h = jax.nn.silu(h) * (x @ p["w_gate"])
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(cfg.activation)
+    return add_bias(h @ p["w_out"], p.get("b_out"))
+
+
+# -- blocked attention core --------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def blocked_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
+                      window: int | None, kv_block: int = 512,
+                      kv_valid=None):
+    """Online-softmax attention, blocked over KV.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh) with H = G·Hkv.
+    positions: (Sq,) and (Skv,) absolute token indices (already offset for
+    prefill continuation / ring buffers).  ``kv_valid``: optional (B, Skv)
+    bool mask for partially-filled caches.
+    Returns (B, Sq, H, dh).
+    """
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(B, Sq, Hkv, G, dh).astype(jnp.float32) * scale
+
+    nb = -(-Skv // kv_block)
+    pad = nb * kv_block - Skv
+    if pad:
+        padk = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k = jnp.pad(k, padk)
+        v = jnp.pad(v, padk)
+        kv_positions = jnp.pad(kv_positions, (0, pad),
+                               constant_values=jnp.iinfo(jnp.int32).max // 2)
+        if kv_valid is None:
+            kv_valid = jnp.arange(nb * kv_block) < Skv
+            kv_valid = jnp.broadcast_to(kv_valid, (B, nb * kv_block))
+        else:
+            kv_valid = jnp.pad(kv_valid, [(0, 0), (0, pad)])
+    elif kv_valid is None:
+        kv_valid = jnp.ones((B, Skv), bool)
+
+    kb = k.reshape(B, nb, kv_block, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(nb, kv_block)
+    mb = kv_valid.reshape(B, nb, kv_block).transpose(1, 0, 2)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb_, vb_, pb_, mb_ = blk
+        s = jnp.einsum("bqkgd,btkd->bqkgt", qg, kb_.astype(jnp.float32))
+        mask = mb_[:, None, None, None, :]
+        if causal:
+            mask = mask & (q_positions[None, :, None, None, None]
+                           >= pb_[None, None, None, None, :])
+        if window is not None:
+            mask = mask & (q_positions[None, :, None, None, None] - window
+                           < pb_[None, None, None, None, :])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgt,btkd->bqkgd", p, vb_.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, dh), jnp.float32)
+    # remat each KV block: without this the scan's backward saves every
+    # block's softmax numerator — i.e. the full (S × S) scores the blocking
+    # exists to avoid (flash attention recomputes p in the backward pass).
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kb, vb, pb, mb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, q_position, kv_positions,
+                     window: int | None, kv_valid):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, dh); caches (B, T, Hkv, dh); q_position (B,) absolute;
+    kv_positions (B, T) absolute; kv_valid (B, T)."""
+    B, _, H, dh = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(B, Hkv, G, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32))
+    mask = kv_valid & (kv_positions <= q_position[:, None])
+    if window is not None:
+        mask = mask & (kv_positions > q_position[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# -- GQA attention layer --------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig):
+    D, H, Hkv, dh = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                     cfg.resolved_head_dim)
+    k = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(k[0], (D, H, dh), cfg.dtype),
+        "wk": dense_init(k[1], (D, Hkv, dh), cfg.dtype),
+        "wv": dense_init(k[2], (D, Hkv, dh), cfg.dtype),
+        "wo": dense_init(k[3], (H, dh, D), cfg.dtype),
+        "bq": maybe_bias(cfg, (H, dh)),
+        "bk": maybe_bias(cfg, (Hkv, dh)),
+        "bv": maybe_bias(cfg, (Hkv, dh)),
+        "bo": maybe_bias(cfg, (D,)),
+    }
+
+
+def attention(p, cfg: ModelConfig, x, *, positions, window=None,
+              kv_block: int = 512):
+    """Full-sequence (train / prefill) GQA self-attention.
+    Returns (out, (k, v)) so prefill can seed a cache."""
+    q = add_bias(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), p.get("bq"))
+    k = add_bias(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), p.get("bk"))
+    v = add_bias(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), p.get("bv"))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = blocked_attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=True,
+                            window=window, kv_block=kv_block)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return add_bias(out, p.get("bo")), (k, v)
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache, *, window=None):
+    """One-token decode.  ``cache``: {"k","v": (B,T,Hkv,dh), "pos": (B,T)
+    absolute positions, "index": (B,) ring write slot, "length": (B,)
+    tokens seen}.  Returns (out, new_cache)."""
+    B = x.shape[0]
+    q = add_bias(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), p.get("bq"))
+    k = add_bias(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), p.get("bk"))
+    v = add_bias(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), p.get("bv"))
+    pos = cache["length"]                       # (B,) absolute position
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    T = cache["k"].shape[1]
+    slot = cache["index"]                       # (B,)
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+    v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+    kv_pos = cache["pos"].at[bidx, slot].set(pos)
+    kv_valid = cache["valid"].at[bidx, slot].set(True)
+    out = decode_attention(q, k_cache, v_cache, q_position=pos,
+                           kv_positions=kv_pos, window=window,
+                           kv_valid=kv_valid)
+    out = add_bias(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), p.get("bo"))
+    new_cache = {"k": k_cache, "v": v_cache, "pos": kv_pos,
+                 "valid": kv_valid, "index": (slot + 1) % T,
+                 "length": pos + 1}
+    return out, new_cache
+
+
+def _cache_bookkeeping(batch: int, capacity: int, length: int):
+    """Shared ring-buffer metadata for a cache that has already absorbed
+    ``length`` tokens (length ≤ capacity for eager inits; dry-runs pass
+    caches as ShapeDtypeStructs so contents never materialise)."""
+    assert length <= capacity, "eager cache init expects length <= capacity"
+    return {
+        "pos": jnp.broadcast_to(jnp.arange(capacity, dtype=jnp.int32),
+                                (batch, capacity)),
+        "valid": jnp.broadcast_to(jnp.arange(capacity) < length,
+                                  (batch, capacity)),
+        "index": jnp.full((batch,), length % capacity, jnp.int32),
+        "length": jnp.full((batch,), length, jnp.int32),
+    }
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int,
+                  prefill_len: int | None = None):
+    """Empty (or "already saw prefill_len tokens") ring-buffer KV cache."""
+    Hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    out = {
+        "k": jnp.zeros((batch, capacity, Hkv, dh), cfg.dtype),
+        "v": jnp.zeros((batch, capacity, Hkv, dh), cfg.dtype),
+    }
+    out.update(_cache_bookkeeping(batch, capacity, prefill_len or 0))
+    return out
+
+
+# -- cross attention (VLM / enc-dec) -----------------------------------------------------
+
+def init_cross_attention(rng, cfg: ModelConfig):
+    return init_attention(rng, cfg)
+
+
+def cross_attention(p, cfg: ModelConfig, x, memory, *, kv_block: int = 512):
+    """Attend from x (B,Sq,D) to a static memory (B,Sm,D), non-causal."""
+    Sm = memory.shape[1]
+    q = add_bias(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), p.get("bq"))
+    k = add_bias(jnp.einsum("bsd,dhk->bshk", memory, p["wk"]), p.get("bk"))
+    v = add_bias(jnp.einsum("bsd,dhk->bshk", memory, p["wv"]), p.get("bv"))
+    Sq = x.shape[1]
+    out = blocked_attention(
+        q, k, v, q_positions=jnp.zeros(Sq, jnp.int32),
+        kv_positions=jnp.zeros(Sm, jnp.int32), causal=False, window=None,
+        kv_block=kv_block)
+    return add_bias(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), p.get("bo"))
+
+
+# -- MLA (deepseek multi-head latent attention) --------------------------------------------
+
+def init_mla(rng, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.num_heads
+    r, nope, vd = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.v_head_dim
+    rp = cfg.qk_rope_head_dim
+    k = jax.random.split(rng, 5)
+    return {
+        "wq": dense_init(k[0], (D, H, nope + rp), cfg.dtype),
+        "w_dkv": dense_init(k[1], (D, r), cfg.dtype),
+        "w_kr": dense_init(k[2], (D, rp), cfg.dtype),
+        "w_uk": dense_init(k[3], (r, H, nope), cfg.dtype),
+        "w_uv": dense_init(k[3], (r, H, vd), cfg.dtype),
+        "wo": dense_init(k[4], (H, vd, D), cfg.dtype),
+    }
+
+
+def mla_attention(p, cfg: ModelConfig, x, *, positions, kv_block: int = 512):
+    """Full-sequence MLA.  Returns (out, (c_kv, k_rope)) for cache seeding."""
+    nope, rp = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = x @ p["w_dkv"]                                   # (B,S,r)
+    k_rope = apply_rope(x @ p["w_kr"], positions, cfg.rope_theta,
+                        head_axis=False)          # (B,S,rp)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"])
+    # fold the shared-rope single head in as extra feature dims of k/q
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (rp,))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    vd = cfg.v_head_dim
+    v_pad = jnp.pad(v, [(0, 0), (0, 0), (0, 0), (0, nope + rp - vd)]) \
+        if vd < nope + rp else v
+    out = blocked_attention(q_full, k_full, v_pad, q_positions=positions,
+                            kv_positions=positions, causal=True, window=None,
+                            kv_block=kv_block)[..., :vd]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (c_kv, k_rope)
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, *, absorb: bool = False,
+               window: int | None = None):
+    """One-token MLA decode against the latent cache {c_kv, k_rope}.
+
+    ``absorb=False``: reconstruct per-head K/V from c_kv each step (naive,
+    paper-faithful baseline).  ``absorb=True``: fold w_uk into the query
+    and w_uv into the output projection so attention runs directly in the
+    512-d latent space — the DeepSeek-V2 matrix-absorption optimization
+    (§Perf hillclimb).
+    """
+    B = x.shape[0]
+    nope, rp, vd = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                    cfg.v_head_dim)
+    r = cfg.kv_lora_rank
+    pos = cache["length"]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    c_kv_t = x @ p["w_dkv"]
+    k_rope_t = apply_rope(x @ p["w_kr"], pos[:, None], cfg.rope_theta,
+                          head_axis=False)
+    T = cache["c_kv"].shape[1]
+    slot = cache["index"]
+    bidx = jnp.arange(B)
+    c_cache = cache["c_kv"].at[bidx, slot].set(c_kv_t[:, 0])
+    r_cache = cache["k_rope"].at[bidx, slot].set(k_rope_t[:, 0])
+    kv_pos = cache["pos"].at[bidx, slot].set(pos)
+    kv_valid = cache["valid"].at[bidx, slot].set(True)
+    mask = kv_valid & (kv_pos <= pos[:, None])
+    if window is not None:
+        mask = mask & (kv_pos > pos[:, None] - window)
+
+    if absorb:
+        # score = (q_nope · w_uk)ᵀ c_kv + q_rope · k_rope : O(T·r) per head
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+        s = jnp.einsum("bshr,btr->bhst", q_lat, c_cache.astype(q_lat.dtype))
+        s = s + jnp.einsum("bshk,btk->bhst", q_rope,
+                           r_cache.astype(q_rope.dtype))
+        s = (s / np.sqrt(nope + rp)).astype(jnp.float32)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", pr.astype(c_cache.dtype), c_cache)
+        out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"])
+    else:
+        k_nope = jnp.einsum("btr,rhk->bthk", c_cache, p["w_uk"])
+        v = jnp.einsum("btr,rhk->bthk", c_cache, p["w_uv"])
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(r_cache[:, :, None, :],
+                                      k_nope.shape[:3] + (rp,))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        v_pad = jnp.pad(v, [(0, 0), (0, 0), (0, 0), (0, nope + rp - vd)]) \
+            if vd < nope + rp else v
+        out = decode_attention(q_full, k_full, v_pad, q_position=pos,
+                               kv_positions=kv_pos, window=window,
+                               kv_valid=kv_valid)[..., :vd]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    new_cache = {"c_kv": c_cache, "k_rope": r_cache, "pos": kv_pos,
+                 "valid": kv_valid, "index": (slot + 1) % T,
+                 "length": pos + 1}
+    return out, new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, capacity: int,
+                   prefill_len: int | None = None):
+    out = {
+        "c_kv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), cfg.dtype),
+        "k_rope": jnp.zeros((batch, capacity, cfg.qk_rope_head_dim),
+                            cfg.dtype),
+    }
+    out.update(_cache_bookkeeping(batch, capacity, prefill_len or 0))
+    return out

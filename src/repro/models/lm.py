@@ -1,0 +1,577 @@
+"""Unified language-model zoo: init / train forward / prefill / decode.
+
+One functional API over six architecture families (see repro.configs):
+
+    params            = init_params(rng, cfg)
+    logits, aux       = forward(params, cfg, batch, kind="train"|"prefill")
+    cache             = init_cache(cfg, batch, capacity, prefill_len)
+    logits, new_cache = decode_step(params, cfg, tokens, cache, extras)
+
+Layer stacks are scanned (``lax.scan`` over stacked params, with
+``jax.checkpoint`` remat inside) wherever the stack is homogeneous —
+dense, moe, ssm, hybrid, and the VLM's (4 self + 1 cross) super-blocks.
+Whisper's 4+4 enc-dec layers are python loops.
+
+Decode shapes: caches are ring buffers of ``capacity`` slots; a
+``sliding_window`` config turns them into the SWA variant that makes
+long_500k legal for full-attention architectures (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (add_bias, attention, attention_decode, blocked_attention,
+                     cross_attention, dense_init, init_attention,
+                     init_cross_attention, init_kv_cache, init_mla,
+                     init_mla_cache, init_mlp, mla_attention, mla_decode,
+                     mlp, rms_norm)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# per-family layer definitions
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(rng, cfg: ModelConfig, *, use_moe: bool):
+    k = jax.random.split(rng, 3)
+    p = {"ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+         "ln2": jnp.ones((cfg.d_model,), cfg.dtype)}
+    p["attn"] = init_mla(k[0], cfg) if cfg.kv_lora_rank \
+        else init_attention(k[0], cfg)
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(k[1], cfg)
+    else:
+        p["mlp"] = init_mlp(k[1], cfg, cfg.d_ff)
+    return p
+
+
+def _dense_layer_fwd(p, cfg: ModelConfig, x, *, positions, window):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.kv_lora_rank:
+        a, _ = mla_attention(p["attn"], cfg, h, positions=positions)
+    else:
+        a, _ = attention(p["attn"], cfg, h, positions=positions,
+                         window=window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, aux = moe_lib.moe_ffn(p["moe"], cfg, h)
+    else:
+        f, aux = mlp(p["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def _dense_layer_decode(p, cfg: ModelConfig, x, cache, *, window):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.kv_lora_rank:
+        a, cache = mla_decode(p["attn"], cfg, h, cache, window=window)
+    else:
+        a, cache = attention_decode(p["attn"], cfg, h, cache, window=window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe_lib.moe_ffn(p["moe"], cfg, h)
+    else:
+        f = mlp(p["mlp"], cfg, h)
+    return x + f, cache
+
+
+def _init_ssm_layer(rng, cfg: ModelConfig):
+    return {"ln": jnp.ones((cfg.d_model,), cfg.dtype),
+            "ssm": ssm_lib.init_ssm(rng, cfg)}
+
+
+def _ssm_layer_fwd(p, cfg, x):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y, _ = ssm_lib.ssm_forward(p["ssm"], cfg, h)
+    return x + y
+
+
+def _ssm_layer_decode(p, cfg, x, cache):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    y, cache = ssm_lib.ssm_decode(p["ssm"], cfg, h, cache)
+    return x + y, cache
+
+
+def _init_hybrid_layer(rng, cfg: ModelConfig):
+    k = jax.random.split(rng, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+            "attn": init_attention(k[0], cfg),
+            "ssm": ssm_lib.init_ssm(k[1], cfg),
+            "mlp": init_mlp(k[2], cfg, cfg.d_ff)}
+
+
+def _hybrid_layer_fwd(p, cfg, x, *, positions, window):
+    """Hymba parallel heads: attention ∥ SSD over the same normed input,
+    mean-fused. [arXiv:2411.13676]"""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, _ = attention(p["attn"], cfg, h, positions=positions, window=window)
+    s, _ = ssm_lib.ssm_forward(p["ssm"], cfg, h)
+    x = x + 0.5 * (a + s)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(p["mlp"], cfg, h)
+
+
+def _hybrid_layer_decode(p, cfg, x, cache, *, window):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, kv = attention_decode(p["attn"], cfg, h, cache["attn"], window=window)
+    s, sc = ssm_lib.ssm_decode(p["ssm"], cfg, h, cache["ssm"])
+    x = x + 0.5 * (a + s)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(p["mlp"], cfg, h), {"attn": kv, "ssm": sc}
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _stacked(rng, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(rng, 8)
+    p: dict = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                            cfg.dtype, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size),
+                                  cfg.dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        n_dense = cfg.first_dense_layers if cfg.num_experts else cfg.num_layers
+        n_moe = cfg.num_layers - n_dense if cfg.num_experts else 0
+        if cfg.num_experts and n_dense:
+            p["head_blocks"] = [
+                _init_dense_layer(k, cfg, use_moe=False)
+                for k in jax.random.split(keys[2], n_dense)]
+        if cfg.num_experts:
+            p["blocks"] = _stacked(
+                keys[3], n_moe,
+                lambda k: _init_dense_layer(k, cfg, use_moe=True))
+        else:
+            p["blocks"] = _stacked(
+                keys[3], cfg.num_layers,
+                lambda k: _init_dense_layer(k, cfg, use_moe=False))
+    elif fam == "ssm":
+        p["blocks"] = _stacked(keys[2], cfg.num_layers,
+                               lambda k: _init_ssm_layer(k, cfg))
+    elif fam == "hybrid":
+        p["blocks"] = _stacked(keys[2], cfg.num_layers,
+                               lambda k: _init_hybrid_layer(k, cfg))
+    elif fam == "vlm":
+        n_super = cfg.num_layers // cfg.cross_attn_every
+        inner = cfg.cross_attn_every - 1
+
+        def init_super(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "self": _stacked(k1, inner,
+                                 lambda kk: _init_dense_layer(kk, cfg,
+                                                              use_moe=False)),
+                "cross": init_cross_attention(k2, cfg),
+                "ln_cross": jnp.ones((cfg.d_model,), cfg.dtype),
+                "gate": jnp.zeros((), cfg.dtype),
+                "tail": _init_dense_layer(k3, cfg, use_moe=False),
+            }
+
+        p["blocks"] = _stacked(keys[2], n_super, init_super)
+        p["vis_proj"] = dense_init(keys[4], (cfg.vision_dim, cfg.d_model),
+                                   cfg.dtype)
+    elif fam == "audio":
+        p["enc_blocks"] = [
+            _init_dense_layer(k, cfg, use_moe=False)
+            for k in jax.random.split(keys[2], cfg.encoder_layers)]
+        p["enc_norm"] = jnp.ones((cfg.d_model,), cfg.dtype)
+
+        def init_dec(k):
+            k1, k2 = jax.random.split(k)
+            d = _init_dense_layer(k1, cfg, use_moe=False)
+            d["cross"] = init_cross_attention(k2, cfg)
+            d["ln_cross"] = jnp.ones((cfg.d_model,), cfg.dtype)
+            return d
+
+        p["dec_blocks"] = [init_dec(k)
+                           for k in jax.random.split(keys[3], cfg.num_layers)]
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(f, cfg: ModelConfig):
+    # prevent_cse=False is the documented setting for checkpoint-inside-scan
+    # (the scan loop boundary already prevents the problematic CSE) and
+    # avoids spurious saved f32 copies of the carry.
+    return jax.checkpoint(f, prevent_cse=False) if cfg.remat else f
+
+
+def forward(params: Params, cfg: ModelConfig, batch: dict,
+            *, window: Optional[int] = None,
+            constrain=None,
+            constrain_block_params=None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  batch: {"tokens": (B,S) int32, and for
+    vlm "vision": (B,Tv,vision_dim); for audio "frames": (B,Te,D)}.
+    Returns (logits (B,S,V), moe_aux_loss)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    window = window if window is not None else cfg.sliding_window
+    constrain = constrain or (lambda t: t)
+    # with_sharding_constraint is its own transpose: constraining the
+    # per-layer param slice inside the scan body ALSO pins the cotangent
+    # (per-layer grad) sharding, turning the backward's all-reduces into
+    # reduce-scatters (§Perf, nemotron/command-r train_4k iteration 3).
+    cbp = constrain_block_params or (lambda t: t)
+    x = constrain(params["embed"][tokens])
+    positions = jnp.arange(S, dtype=jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        for lp in params.get("head_blocks", []):
+            x, aux = _dense_layer_fwd(lp, cfg, x, positions=positions,
+                                      window=window)
+            aux_total += aux
+
+        def blk(carry, lp):
+            x, aux = carry
+            x, a = _dense_layer_fwd(cbp(lp), cfg, x, positions=positions,
+                                    window=window)
+            return (constrain(x), aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            _maybe_remat(blk, cfg), (x, aux_total), params["blocks"])
+    elif fam == "ssm":
+        def blk(x, lp):
+            return constrain(_ssm_layer_fwd(cbp(lp), cfg, x)), None
+
+        x, _ = jax.lax.scan(_maybe_remat(blk, cfg), x, params["blocks"])
+    elif fam == "hybrid":
+        def blk(x, lp):
+            return constrain(_hybrid_layer_fwd(cbp(lp), cfg, x,
+                                               positions=positions,
+                                               window=window)), None
+
+        x, _ = jax.lax.scan(_maybe_remat(blk, cfg), x, params["blocks"])
+    elif fam == "vlm":
+        memory = batch["vision"] @ params["vis_proj"]
+
+        def blk(x, lp):
+            def self_blk(x, sp):
+                x, _ = _dense_layer_fwd(sp, cfg, x, positions=positions,
+                                        window=window)
+                return x, None
+
+            x, _ = jax.lax.scan(self_blk, x, lp["self"])
+            h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            x = x + jnp.tanh(lp["gate"]) * cross_attention(
+                lp["cross"], cfg, h, memory)
+            x, _ = _dense_layer_fwd(lp["tail"], cfg, x, positions=positions,
+                                    window=window)
+            return constrain(x), None
+
+        x, _ = jax.lax.scan(_maybe_remat(blk, cfg), x, params["blocks"])
+    elif fam == "audio":
+        enc = batch["frames"]
+        enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+        for lp in params["enc_blocks"]:
+            h = rms_norm(enc, lp["ln1"], cfg.norm_eps)
+            q = add_bias(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"]),
+                         lp["attn"].get("bq"))
+            k = add_bias(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"]),
+                         lp["attn"].get("bk"))
+            v = add_bias(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"]),
+                         lp["attn"].get("bv"))
+            from .layers import apply_rope
+            q = apply_rope(q, enc_pos, cfg.rope_theta)
+            k = apply_rope(k, enc_pos, cfg.rope_theta)
+            o = blocked_attention(q, k, v, q_positions=enc_pos,
+                                  kv_positions=enc_pos, causal=False,
+                                  window=None)
+            o = add_bias(jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"]),
+                         lp["attn"].get("bo"))
+            enc = enc + o
+            h = rms_norm(enc, lp["ln2"], cfg.norm_eps)
+            enc = enc + mlp(lp["mlp"], cfg, h)
+        enc = rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+        for lp in params["dec_blocks"]:
+            x, _ = _dense_layer_fwd(
+                {k: v for k, v in lp.items()
+                 if k in ("ln1", "ln2", "attn", "mlp")},
+                cfg, x, positions=positions, window=window)
+            h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            x = x + cross_attention(lp["cross"], cfg, h, enc)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch, *, aux_weight: float = 0.01,
+            constrain=None, constrain_logits=None,
+            constrain_block_params=None):
+    logits, aux = forward(params, cfg, batch, constrain=constrain,
+                          constrain_block_params=constrain_block_params)
+    if constrain_logits is not None:
+        logits = constrain_logits(logits)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, microbatches: int = 1,
+                    constrain=None, constrain_logits=None,
+                    accum_dtype=jnp.float32, constrain_grads=None,
+                    constrain_block_params=None):
+    """Returns train_step(params, opt_state, batch) -> (params, state,
+    metrics).  ``microbatches`` > 1 enables gradient accumulation: the
+    global batch is split along its leading dim and scanned, so peak
+    activation memory scales with batch/microbatches (the knob that fits
+    the 340B train_4k point into v5e HBM)."""
+
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, constrain=constrain,
+                          constrain_logits=constrain_logits,
+                          constrain_block_params=constrain_block_params),
+        has_aux=True)
+
+    cg = constrain_grads or (lambda g: g)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (tot, metrics), grads = grad_fn(params, batch=batch)
+            grads = cg(grads)
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % microbatches == 0, (B, microbatches)
+            mb = jax.tree_util.tree_map(
+                lambda a: a.reshape((microbatches, B // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def acc_step(carry, b):
+                g_acc, m_acc = carry
+                (_, metrics), grads = grad_fn(params, batch=b)
+                # pin per-microbatch grads to the parameter sharding so the
+                # partitioner emits reduce-scatters, not 16x-bigger
+                # all-reduces (§Perf iteration 2, nemotron train_4k)
+                grads = cg(grads)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+                m_acc = jax.tree_util.tree_map(jnp.add, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            m0 = {"loss": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_step, (g0, m0), mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / microbatches), grads)
+            metrics = jax.tree_util.tree_map(
+                lambda m: m / microbatches, metrics)
+        params, opt_state = optimizer.step(params, grads, opt_state)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               *, prefill_len: int = 0, extras: dict | None = None):
+    """Per-layer decode caches, stacked for scanning where the stack is.
+
+    ``capacity`` should be min(seq_len, sliding_window or seq_len).
+    For vlm/audio, ``extras`` provides the static memory (vision / encoder
+    output) whose cross K/V are precomputed into the cache.
+    """
+    fam = cfg.family
+
+    def stack(make, n):
+        one = make()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    if fam in ("dense", "moe"):
+        mk = (lambda: init_mla_cache(cfg, batch, capacity, prefill_len)) \
+            if cfg.kv_lora_rank else \
+            (lambda: init_kv_cache(cfg, batch, capacity, prefill_len))
+        n_dense = cfg.first_dense_layers if cfg.num_experts else 0
+        n_scan = cfg.num_layers - n_dense
+        cache = {"blocks": stack(mk, n_scan)}
+        if n_dense:
+            cache["head_blocks"] = [mk() for _ in range(n_dense)]
+        return cache
+    if fam == "ssm":
+        return {"blocks": stack(lambda: ssm_lib.init_ssm_cache(cfg, batch),
+                                cfg.num_layers)}
+    if fam == "hybrid":
+        def mk():
+            return {"attn": init_kv_cache(cfg, batch, capacity, prefill_len),
+                    "ssm": ssm_lib.init_ssm_cache(cfg, batch)}
+        return {"blocks": stack(mk, cfg.num_layers)}
+    if fam == "vlm":
+        n_super = cfg.num_layers // cfg.cross_attn_every
+        inner = cfg.cross_attn_every - 1
+
+        def mk():
+            return {
+                "self": stack(lambda: init_kv_cache(cfg, batch, capacity,
+                                                    prefill_len), inner),
+                "tail": init_kv_cache(cfg, batch, capacity, prefill_len),
+                "cross_k": jnp.zeros((batch, cfg.vision_tokens,
+                                      cfg.num_kv_heads,
+                                      cfg.resolved_head_dim), cfg.dtype),
+                "cross_v": jnp.zeros((batch, cfg.vision_tokens,
+                                      cfg.num_kv_heads,
+                                      cfg.resolved_head_dim), cfg.dtype),
+            }
+        return {"blocks": stack(mk, n_super)}
+    if fam == "audio":
+        def mk():
+            return {
+                "self": init_kv_cache(cfg, batch, capacity, prefill_len),
+                "cross_k": jnp.zeros((batch, cfg.encoder_seq,
+                                      cfg.num_kv_heads,
+                                      cfg.resolved_head_dim), cfg.dtype),
+                "cross_v": jnp.zeros((batch, cfg.encoder_seq,
+                                      cfg.num_kv_heads,
+                                      cfg.resolved_head_dim), cfg.dtype),
+            }
+        return {"dec_blocks": [mk() for _ in range(cfg.num_layers)]}
+    raise ValueError(fam)
+
+
+def _cross_decode(p, cfg, x, k_cache, v_cache):
+    """One-token cross-attention against precomputed memory K/V."""
+    from .layers import decode_attention
+    B = x.shape[0]
+    q = add_bias(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), p.get("bq"))
+    T = k_cache.shape[1]
+    valid = jnp.ones((B, T), bool)
+    pos = jnp.zeros((B, T), jnp.int32)
+    out = decode_attention(q, k_cache, v_cache,
+                           q_position=jnp.zeros((B,), jnp.int32),
+                           kv_positions=pos, window=None, kv_valid=valid)
+    return add_bias(jnp.einsum("bshk,hkd->bsd", out, p["wo"]), p.get("bo"))
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens, cache,
+                *, window: Optional[int] = None):
+    """One decode step.  tokens: (B, 1) int32.  Returns (logits, cache)."""
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][tokens]
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        new_head = []
+        for lp, lc in zip(params.get("head_blocks", []),
+                          cache.get("head_blocks", [])):
+            x, c = _dense_layer_decode(lp, cfg, x, lc, window=window)
+            new_head.append(c)
+
+        def blk(x, scanned):
+            lp, lc = scanned
+            x, c = _dense_layer_decode(lp, cfg, x, lc, window=window)
+            return x, c
+
+        x, new_blocks = jax.lax.scan(blk, x, (params["blocks"],
+                                              cache["blocks"]))
+        new_cache = {"blocks": new_blocks}
+        if new_head:
+            new_cache["head_blocks"] = new_head
+    elif fam == "ssm":
+        def blk(x, scanned):
+            lp, lc = scanned
+            x, c = _ssm_layer_decode(lp, cfg, x, lc)
+            return x, c
+
+        x, nb = jax.lax.scan(blk, x, (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": nb}
+    elif fam == "hybrid":
+        def blk(x, scanned):
+            lp, lc = scanned
+            x, c = _hybrid_layer_decode(lp, cfg, x, lc, window=window)
+            return x, c
+
+        x, nb = jax.lax.scan(blk, x, (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": nb}
+    elif fam == "vlm":
+        def blk(x, scanned):
+            lp, lc = scanned
+
+            def self_blk(x, s):
+                sp, sc = s
+                x, c = _dense_layer_decode(sp, cfg, x, sc, window=window)
+                return x, c
+
+            x, nself = jax.lax.scan(self_blk, x, (lp["self"], lc["self"]))
+            h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            x = x + jnp.tanh(lp["gate"]) * _cross_decode(
+                lp["cross"], cfg, h, lc["cross_k"], lc["cross_v"])
+            x, ntail = _dense_layer_decode(lp["tail"], cfg, x, lc["tail"],
+                                           window=window)
+            return x, {"self": nself, "tail": ntail,
+                       "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]}
+
+        x, nb = jax.lax.scan(blk, x, (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": nb}
+    elif fam == "audio":
+        new_dec = []
+        for lp, lc in zip(params["dec_blocks"], cache["dec_blocks"]):
+            sub = {k: v for k, v in lp.items()
+                   if k in ("ln1", "ln2", "attn", "mlp")}
+            x, c = _dense_layer_decode(sub, cfg, x, lc["self"], window=window)
+            h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            x = x + _cross_decode(lp["cross"], cfg, h, lc["cross_k"],
+                                  lc["cross_v"])
+            new_dec.append({"self": c, "cross_k": lc["cross_k"],
+                            "cross_v": lc["cross_v"]})
+        new_cache = {"dec_blocks": new_dec}
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens, cache):
+        return decode_step(params, cfg, tokens, cache)
+    return serve_step
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(p.shape))
+               for p in jax.tree_util.tree_leaves(params))

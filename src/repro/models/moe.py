@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch.
+
+Design notes (TPU adaptation, see DESIGN.md):
+
+* We deliberately avoid the GShard one-hot einsum dispatch — its dispatch
+  einsum FLOPs dwarf the useful expert FLOPs and would corrupt the
+  roofline's MODEL_FLOPS/HLO_FLOPs ratio.  Instead tokens are *sorted by
+  expert id* and gathered into per-expert capacity buffers, computed with
+  batched expert einsums, and combined with a scatter-add.  Under GSPMD
+  the expert dimension shards on the ``model``/``expert`` mesh axis, so
+  dispatch/combine lower to all-to-all style collectives.
+* Capacity: C = ceil(T·k/E · capacity_factor); overflowing tokens are
+  dropped (standard token-dropping MoE), underflow slots are zero.
+* Router: softmax over expert logits, top-k, probs renormalised over the
+  selected experts; load-balance auxiliary loss (Switch-style) returned.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from .layers import dense_init, init_mlp, mlp
+
+
+def init_moe(rng, cfg: ModelConfig):
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    keys = jax.random.split(rng, 5)
+    gated = cfg.activation == "silu_gated"
+    p = {
+        "router": dense_init(keys[0], (D, E), cfg.dtype, scale=0.02),
+        "w_in": dense_init(keys[1], (E, D, F), cfg.dtype),
+        "w_out": dense_init(keys[2], (E, F, D), cfg.dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(keys[3], (E, D, F), cfg.dtype)
+    if cfg.num_shared_experts:
+        shared_cfg = cfg
+        p["shared"] = init_mlp(keys[4], shared_cfg,
+                               cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def _expert_ffn(p, cfg: ModelConfig, xs):
+    """xs: (E, C, D) → (E, C, D) via per-expert FFN."""
+    h = jnp.einsum("ecd,edf->ecf", xs, p["w_in"])
+    if cfg.activation == "silu_gated":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xs, p["w_gate"])
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+
+
+def _route(p, cfg: ModelConfig, xt):
+    """Router top-k + Switch aux loss.  xt: (T, D)."""
+    E, K = cfg.num_experts, cfg.top_k
+    logits = (xt @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                  # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    frac = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * probs.mean(axis=0))
+    return top_p, top_e, aux
+
+
+def _dispatch(cfg: ModelConfig, xt, top_p, top_e, C):
+    """Sort tokens by expert, drop past capacity C, build (E, C, D)
+    buffers.  Returns (buf, combine metadata)."""
+    E, K = cfg.num_experts, cfg.top_k
+    T, D = xt.shape
+    TK = T * K
+    flat_e = top_e.reshape(TK)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_p = top_p.reshape(TK).astype(xt.dtype)
+    order = jnp.argsort(flat_e)                              # stable radix
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(TK, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)              # E*C = trash row
+    gathered = xt[st] * keep[:, None].astype(xt.dtype)       # (TK, D)
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[slot].add(gathered)
+    return buf[:-1].reshape(E, C, D), (se, st, sp, pos, keep)
+
+
+def _combine(cfg: ModelConfig, expert_out, meta, T):
+    E = cfg.num_experts
+    C = expert_out.shape[1]
+    D = expert_out.shape[-1]
+    se, st, sp, pos, keep = meta
+    back = expert_out.reshape(E * C, D)[jnp.where(keep, se * C + pos, 0)]
+    back = back * (sp * keep.astype(sp.dtype))[:, None]
+    return jnp.zeros((T, D), expert_out.dtype).at[st].add(back)
+
+
+def moe_ffn(p, cfg: ModelConfig, x):
+    """x: (B, S, D) → (out, aux_loss).
+
+    ``cfg.moe_groups > 1`` splits the token stream into that many groups
+    (aligned with the data-sharding) so the argsort / gather / scatter of
+    dispatch+combine stay shard-local; only the batched expert einsum
+    communicates (all-to-all to the model/expert axis).  Group capacity
+    C_g = ceil(T_g·k/E · capacity_factor) — standard GShard grouping."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    G = max(1, cfg.moe_groups)
+
+    if G == 1:
+        top_p, top_e, aux = _route(p, cfg, xt)
+        C = int(np.ceil(T * K / E * cfg.capacity_factor))
+        buf, meta = _dispatch(cfg, xt, top_p, top_e, C)
+        expert_out = _expert_ffn(p, cfg, buf)
+        out = _combine(cfg, expert_out, meta, T)
+    else:
+        assert T % G == 0, (T, G)
+        Tg = T // G
+        Cg = int(np.ceil(Tg * K / E * cfg.capacity_factor))
+        xg = xt.reshape(G, Tg, D)
+
+        def per_group(xt_g):
+            top_p, top_e, aux_g = _route(p, cfg, xt_g)
+            buf, meta = _dispatch(cfg, xt_g, top_p, top_e, Cg)
+            return buf, meta, aux_g
+
+        bufs, metas, auxs = jax.vmap(per_group)(xg)          # (G, E, Cg, D)
+        aux = auxs.mean()
+        # batched expert einsum: groups stay on the data axis, experts on
+        # the model axis ⇒ the ONLY cross-shard exchange of the MoE layer
+        expert_out = jnp.einsum("gecd,edf->gecf", bufs, p["w_in"])
+        if cfg.activation == "silu_gated":
+            expert_out = jax.nn.silu(expert_out) * jnp.einsum(
+                "gecd,edf->gecf", bufs, p["w_gate"])
+        elif cfg.activation == "squared_relu":
+            expert_out = jnp.square(jax.nn.relu(expert_out))
+        else:
+            expert_out = jax.nn.gelu(expert_out)
+        expert_out = jnp.einsum("gecf,efd->gecd", expert_out, p["w_out"])
+        out = jax.vmap(lambda eo, m: _combine(cfg, eo, m, Tg))(
+            expert_out, metas)
+        out = out.reshape(T, D)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(p["shared"], cfg, xt)
+    return out.reshape(B, S, D), aux

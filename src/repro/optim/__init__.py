@@ -1,0 +1,3 @@
+from .optimizer import Optimizer, adafactor, adam, adamw, sgd
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "adafactor"]

@@ -1,0 +1,165 @@
+"""Functional optimizers (optax-style, no external deps).
+
+An :class:`Optimizer` is a pair of pure functions
+
+    state  = opt.init(params)
+    params, state = opt.step(params, grads, state)
+
+so it jits and shards transparently under pjit.  ``adafactor`` factors the
+second moment of matrices (rows+cols instead of full), which is what makes
+the 340B-parameter dry-run configuration fit HBM (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], Any]
+    step: Callable[[Params, Params, Any], tuple[Params, Any]]
+
+
+# -- SGD (+momentum) ---------------------------------------------------------
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def step(params, grads, state):
+        if momentum == 0.0:
+            new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+            return new, state
+        vel = jax.tree_util.tree_map(lambda v, g: momentum * v + g, state, grads)
+        new = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, vel)
+        return new, vel
+
+    return Optimizer(f"sgd(lr={lr})", init, step)
+
+
+# -- Adam / AdamW -------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    mu: Params
+    nu: Params
+    count: jax.Array
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamState(jax.tree_util.tree_map(z, params),
+                         jax.tree_util.tree_map(z, params),
+                         jnp.zeros((), jnp.int32))
+
+    def step(params, grads, state):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+            state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(u.dtype)
+            return (p - lr * u.astype(p.dtype)).astype(p.dtype)
+
+        new = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new, AdamState(mu, nu, count)
+
+    tag = "adamw" if weight_decay else "adam"
+    return Optimizer(f"{tag}(lr={lr})", init, step)
+
+
+def adamw(lr: float, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+# -- Adafactor (factored second moment) ----------------------------------------
+
+class AdafactorState(NamedTuple):
+    vr: Params    # row stats for matrices, full for vectors
+    vc: Params    # col stats for matrices, () for vectors
+    count: jax.Array
+
+
+def adafactor(lr: float, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Simplified Adafactor: factored v for rank≥2 leaves (last two dims),
+    full v otherwise.  O(rows+cols) state for the big weight matrices."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+                else jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if _factored(p) else jnp.zeros((), jnp.float32)
+
+        return AdafactorState(jax.tree_util.tree_map(vr, params),
+                              jax.tree_util.tree_map(vc, params),
+                              jnp.zeros((), jnp.int32))
+
+    def step(params, grads, state):
+        count = state.count + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+        def upd_core(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                nvr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                nvc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                denom = nvr.mean(axis=-1, keepdims=True)
+                r = (nvr / jnp.maximum(denom, eps))[..., None]
+                c = nvc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(r * c, eps))
+            else:
+                nvr = beta * vr + (1 - beta) * g2
+                nvc = vc
+                u = g * jax.lax.rsqrt(jnp.maximum(nvr, eps))
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p - lr * u.astype(p.dtype)).astype(p.dtype), nvr, nvc
+
+        def upd(p, g, vr, vc):
+            # layer-stacked leaves (leading scan dim) update one layer at a
+            # time: bounds the f32 transients to 1/L of the leaf instead of
+            # materialising (L, ...) f32 copies of 340B-class weights.
+            if p.ndim >= 3:
+                return jax.lax.map(lambda t: upd_core(*t), (p, g, vr, vc))
+            return upd_core(p, g, vr, vc)
+
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = tree.flatten_up_to(grads)
+        flat_vr = tree.flatten_up_to(state.vr)
+        flat_vc = tree.flatten_up_to(state.vc)
+        outs = [upd(p, g, vr, vc) for p, g, vr, vc
+                in zip(flat_p, flat_g, flat_vr, flat_vc)]
+        new_p = tree.unflatten([o[0] for o in outs])
+        new_vr = tree.unflatten([o[1] for o in outs])
+        new_vc = tree.unflatten([o[2] for o in outs])
+        return new_p, AdafactorState(new_vr, new_vc, count)
+
+    return Optimizer(f"adafactor(lr={lr})", init, step)

@@ -1,0 +1,23 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
+single CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+
+import numpy as np
+import pytest
+
+from repro.graphs import bfs_partition, make_client_shards, make_graph
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    return make_graph("arxiv", scale=0.15, seed=7)
+
+
+@pytest.fixture(scope="session")
+def dense_graph():
+    return make_graph("reddit", scale=0.2, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_shards(small_graph):
+    part = bfs_partition(small_graph, 4, seed=0)
+    return make_client_shards(small_graph, part), part

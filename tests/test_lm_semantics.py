@@ -1,0 +1,302 @@
+"""Deep numerical semantics of the zoo's building blocks.
+
+The strongest test here is decode≡forward teacher-forcing consistency:
+stepping the decode path token by token must reproduce the full-sequence
+forward logits for every family (this exercises KV caches, ring-buffer
+bookkeeping, RoPE offsets, SSD recurrent state, cross-attention caches).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.configs.base import ModelConfig
+from repro.models import lm, moe as moe_lib, ssm as ssm_lib
+from repro.models.layers import (blocked_attention, decode_attention,
+                                 init_mla, mla_attention, mla_decode,
+                                 init_mla_cache, apply_rope)
+
+
+# -- blocked attention vs naive oracle ------------------------------------------
+
+def naive_attention(q, k, v, *, causal, window, q_pos, kv_pos):
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bthd->bhqt", q, kk) / np.sqrt(dh)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - window < kv_pos[None, :]
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqt,bthd->bqhd", p, vv)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 4]),
+       st.sampled_from([8, 17, 64]), st.sampled_from([None, 7, 16]),
+       st.sampled_from([4, 5, 16]))
+def test_blocked_attention_matches_naive(seed, g, skv, window, kv_block):
+    rng = np.random.default_rng(seed)
+    B, Hkv, dh = 2, 2, 8
+    H = Hkv * g
+    sq = skv
+    q = jnp.asarray(rng.standard_normal((B, sq, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, skv, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, skv, Hkv, dh)), jnp.float32)
+    pos = jnp.arange(sq)
+    got = blocked_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                            causal=True, window=window, kv_block=kv_block)
+    want = naive_attention(q, k, v, causal=True, window=window,
+                           q_pos=pos, kv_pos=pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_naive():
+    rng = np.random.default_rng(0)
+    B, T, Hkv, G, dh = 3, 12, 2, 3, 8
+    H = Hkv * G
+    q = jnp.asarray(rng.standard_normal((B, 1, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    valid = kv_pos < 9
+    qpos = jnp.full((B,), 8)
+    got = decode_attention(q, k, v, q_position=qpos, kv_positions=kv_pos,
+                           window=None, kv_valid=valid)
+    want = naive_attention(q, k[:, :9], v[:, :9], causal=True, window=None,
+                           q_pos=jnp.array([8]), kv_pos=jnp.arange(9))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- decode == forward (teacher forcing) per family -------------------------------
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "phi3.5-moe-42b-a6.6b",
+                                  "mamba2-1.3b", "hymba-1.5b",
+                                  "deepseek-v2-lite-16b",
+                                  "llama-3.2-vision-11b", "whisper-tiny"])
+def test_decode_matches_forward(arch):
+    cfg = get_reduced(arch)
+    if cfg.num_experts:
+        # token-dropping MoE is batch-size-dependent; use capacity big
+        # enough that nothing drops in either path
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    S = 16 if cfg.family not in ("ssm", "hybrid") else 64
+    B = 2
+    rng = np.random.default_rng(1)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32)}
+    extras = {}
+    if cfg.family == "vlm":
+        batch["vision"] = jnp.asarray(
+            rng.standard_normal((B, cfg.vision_tokens, cfg.vision_dim)),
+            jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+
+    ref_logits, _ = lm.forward(params, cfg, batch)
+
+    cache = lm.init_cache(cfg, B, S)
+    # seed cross-attention caches from the same memory the forward used
+    cache = _seed_cross_caches(params, cfg, cache, batch)
+    dec = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
+    outs = []
+    for t in range(S):
+        lg, cache = dec(params, batch["tokens"][:, t: t + 1], cache)
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref_logits, np.float32),
+        rtol=5e-3, atol=5e-3)
+
+
+def _seed_cross_caches(params, cfg, cache, batch):
+    """Fill decode-time cross K/V from the static memory (vision/encoder)."""
+    from repro.models.layers import add_bias
+    if cfg.family == "vlm":
+        memory = batch["vision"] @ params["vis_proj"]
+
+        def fill(blocks_cache, blocks_params):
+            def one(lc, lp):
+                k = add_bias(jnp.einsum("bsd,dhk->bshk", memory,
+                                        lp["cross"]["wk"]),
+                             lp["cross"].get("bk"))
+                v = add_bias(jnp.einsum("bsd,dhk->bshk", memory,
+                                        lp["cross"]["wv"]),
+                             lp["cross"].get("bv"))
+                lc = dict(lc)
+                lc["cross_k"], lc["cross_v"] = k, v
+                return lc
+
+            n = jax.tree_util.tree_leaves(blocks_cache)[0].shape[0]
+            return jax.vmap(one)(blocks_cache,
+                                 blocks_params)
+
+        cache = {"blocks": fill(cache["blocks"], params["blocks"])}
+        return cache
+    if cfg.family == "audio":
+        # recompute the encoder output exactly as forward does
+        enc_logits, _ = lm.forward(params, cfg, {
+            "tokens": batch["tokens"][:, :1], "frames": batch["frames"]})
+        # cheaper: call the internal encoder by running forward on a
+        # 1-token prefix is wasteful but correct isn't available — rebuild:
+        enc = _whisper_encode(params, cfg, batch["frames"])
+        new = []
+        for lp, lc in zip(params["dec_blocks"], cache["dec_blocks"]):
+            k = add_bias(jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wk"]),
+                         lp["cross"].get("bk"))
+            v = add_bias(jnp.einsum("bsd,dhk->bshk", enc, lp["cross"]["wv"]),
+                         lp["cross"].get("bv"))
+            lc = dict(lc)
+            lc["cross_k"], lc["cross_v"] = k, v
+            new.append(lc)
+        return {"dec_blocks": new}
+    return cache
+
+
+def _whisper_encode(params, cfg, frames):
+    from repro.models.layers import rms_norm, mlp, blocked_attention, add_bias
+    enc = frames
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    for lp in params["enc_blocks"]:
+        h = rms_norm(enc, lp["ln1"], cfg.norm_eps)
+        q = add_bias(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"]),
+                     lp["attn"].get("bq"))
+        k = add_bias(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"]),
+                     lp["attn"].get("bk"))
+        v = add_bias(jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"]),
+                     lp["attn"].get("bv"))
+        q = apply_rope(q, enc_pos, cfg.rope_theta)
+        k = apply_rope(k, enc_pos, cfg.rope_theta)
+        o = blocked_attention(q, k, v, q_positions=enc_pos,
+                              kv_positions=enc_pos, causal=False, window=None)
+        o = add_bias(jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"]),
+                     lp["attn"].get("bo"))
+        enc = enc + o
+        h = rms_norm(enc, lp["ln2"], cfg.norm_eps)
+        enc = enc + mlp(lp["mlp"], cfg, h)
+    return rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+
+# -- sliding window ring buffer ----------------------------------------------------
+
+def test_ring_buffer_window_decode():
+    """With capacity == window < S, decode must equal a full forward with
+    the same sliding window."""
+    cfg = dataclasses.replace(get_reduced("smollm-360m"), sliding_window=8)
+    S, B = 24, 2
+    rng = np.random.default_rng(3)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32)}
+    ref, _ = lm.forward(params, cfg, batch)
+    cache = lm.init_cache(cfg, B, 8)   # ring of window size
+    dec = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
+    outs = []
+    for t in range(S):
+        lg, cache = dec(params, batch["tokens"][:, t: t + 1], cache)
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-3, atol=5e-3)
+
+
+# -- MLA: absorbed decode == naive decode ----------------------------------------
+
+def test_mla_absorb_equals_naive():
+    cfg = get_reduced("deepseek-v2-lite-16b")
+    rng = np.random.default_rng(5)
+    p = init_mla(jax.random.PRNGKey(2), cfg)
+    B, T = 2, 8
+    cache_a = init_mla_cache(cfg, B, T, prefill_len=0)
+    cache_b = jax.tree_util.tree_map(jnp.copy, cache_a)
+    for t in range(4):
+        x = jnp.asarray(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+        out_n, cache_a = mla_decode(p, cfg, x, cache_a, absorb=False)
+        out_a, cache_b = mla_decode(p, cfg, x, cache_b, absorb=True)
+        np.testing.assert_allclose(np.asarray(out_n), np.asarray(out_a),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# -- MoE dispatch ------------------------------------------------------------------
+
+def test_moe_matches_dense_expert_sum():
+    """With capacity high enough that nothing drops, sorted-dispatch MoE
+    must equal the naive 'run every expert on every token' oracle."""
+    cfg = dataclasses.replace(get_reduced("phi3.5-moe-42b-a6.6b"),
+                              capacity_factor=8.0)
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    got, aux = moe_lib.moe_ffn(p, cfg, x)
+
+    # oracle
+    T = 16
+    xt = x.reshape(T, cfg.d_model)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    all_out = moe_lib._expert_ffn(
+        p, cfg, jnp.broadcast_to(xt, (cfg.num_experts, T, cfg.d_model)))
+    want = jnp.zeros_like(xt)
+    for kk in range(cfg.top_k):
+        want = want + top_p[:, kk, None] * \
+            all_out[top_e[:, kk], jnp.arange(T)]
+    if cfg.num_shared_experts:
+        from repro.models.layers import mlp
+        want = want + mlp(p["shared"], cfg, xt)
+    np.testing.assert_allclose(np.asarray(got).reshape(T, -1),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = dataclasses.replace(get_reduced("phi3.5-moe-42b-a6.6b"),
+                              capacity_factor=0.25)
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 32, cfg.d_model)),
+                    jnp.float32)
+    out, _ = moe_lib.moe_ffn(p, cfg, x)
+    assert out.shape == x.shape
+    assert not bool(jnp.isnan(out).any())
+
+
+# -- SSD: chunked dual form == stepwise recurrence ----------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100))
+def test_ssd_chunked_equals_recurrent(seed):
+    cfg = get_reduced("mamba2-1.3b")
+    rng = np.random.default_rng(seed)
+    p = ssm_lib.init_ssm(jax.random.PRNGKey(seed), cfg)
+    B, S = 2, cfg.ssm_chunk * 2
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)) * 0.3,
+                    jnp.float32)
+    y_seq, (conv_tail, state_seq) = ssm_lib.ssm_forward(p, cfg, x)
+
+    cache = ssm_lib.init_ssm_cache(cfg, B)
+    ys = []
+    for t in range(S):
+        y_t, cache = ssm_lib.ssm_decode(p, cfg, x[:, t: t + 1], cache)
+        ys.append(y_t[:, 0])
+    y_step = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cache["state"]),
+                               np.asarray(state_seq), rtol=2e-3, atol=2e-3)
