@@ -38,10 +38,12 @@ def graph_for(name: str, *, seed: int = 0):
 
 def run_strategy(graph, batch_size, strat: Strategy, *, rounds: int,
                  clients: int = 4, conv: str = "graphconv",
-                 fanout: int = 5, seed: int = 0, num_layers: int = 3):
+                 fanout: int = 5, seed: int = 0, num_layers: int = 3,
+                 **trainer_kw):
     tr = FederatedGNNTrainer(
         graph, clients, strat, conv=conv, fanout=fanout,
-        batch_size=batch_size, seed=seed, num_layers=num_layers)
+        batch_size=batch_size, seed=seed, num_layers=num_layers,
+        **trainer_kw)
     stats = tr.train(rounds)
     return tr, stats
 

@@ -8,9 +8,9 @@ in EXPERIMENTS.md.  The roofline section reads results/dryrun.json — run
 
 from __future__ import annotations
 
-from . import (bench_fanout, bench_fedopt, bench_pull, bench_retention,
-               bench_round_time, bench_scaling, bench_scoring, bench_tta,
-               roofline)
+from . import (bench_exchange, bench_fanout, bench_fedopt, bench_pull,
+               bench_retention, bench_round_time, bench_scaling,
+               bench_scoring, bench_tta, roofline)
 
 
 def main() -> None:
@@ -23,6 +23,7 @@ def main() -> None:
         (bench_pull, "Fig12 pull prefetch analysis"),
         (bench_scaling, "Fig13 client scaling"),
         (bench_fanout, "Fig14 fanout"),
+        (bench_exchange, "Beyond-paper: exchange codec x delta x shards"),
         (bench_fedopt, "Beyond-paper: federated LLM delta pruning/overlap"),
         (roofline, "Roofline (deliverable g)"),
     ):

@@ -24,18 +24,27 @@ class NetworkModel:
     bandwidth_bytes_per_s: float = 125e6      # 1 Gbps
     rpc_overhead_s: float = 1.5e-3            # per round-trip (LAN + Redis)
     per_embedding_overhead_s: float = 6.0e-6  # ser/deser + pipeline cost
-    bytes_per_scalar: int = 4                 # float32 embeddings
+    bytes_per_scalar: float = 4               # fp32 wire default (no codec)
 
-    def embedding_bytes(self, n: int, hidden: int, layers: int) -> int:
-        return n * hidden * layers * self.bytes_per_scalar
+    def embedding_bytes(self, n: int, hidden: int, layers: int,
+                        *, bytes_per_scalar: float | None = None) -> int:
+        """Wire bytes for n embeddings × layers tables.  The exchange
+        subsystem's codecs drive ``bytes_per_scalar`` (e.g. int8 rows pay
+        1 B/scalar + an amortized 4 B/row scale); default is the model's
+        own fp32 value."""
+        bps = self.bytes_per_scalar if bytes_per_scalar is None \
+            else bytes_per_scalar
+        return int(round(n * hidden * layers * bps))
 
     def transfer_time(self, n_embeddings: int, hidden: int, layers: int,
-                      *, n_rpcs: int = 1) -> float:
+                      *, n_rpcs: int = 1,
+                      bytes_per_scalar: float | None = None) -> float:
         """Time for a batched+pipelined transfer of n embeddings ×
         ``layers`` embedding-table namespaces."""
         if n_embeddings <= 0:
             return 0.0
-        wire = self.embedding_bytes(n_embeddings, hidden, layers) \
+        wire = self.embedding_bytes(n_embeddings, hidden, layers,
+                                    bytes_per_scalar=bytes_per_scalar) \
             / self.bandwidth_bytes_per_s
         return wire + n_rpcs * self.rpc_overhead_s \
             + n_embeddings * layers * self.per_embedding_overhead_s

@@ -8,6 +8,11 @@ RPCs are batched + pipelined exactly as §5.1 describes.
 
 The server is honest-but-curious: it only ever sees (vertex id →
 embedding vector); raw features (h^0) are never registered.
+
+The exchange subsystem (repro.exchange) uses the *storage* surface only
+(``register``/``write``/``gather``) and does its own codec-aware wire
+accounting per transport shard; the classic ``push``/``pull`` RPC surface
+remains for direct single-server use.
 """
 
 from __future__ import annotations
@@ -25,12 +30,31 @@ class EmbeddingServer:
         self.hidden = hidden
         self.net = net or NetworkModel()
         self._row: dict[int, int] = {}         # global id -> row
-        self._tables: list[np.ndarray] = [
+        self._cap = 0                          # allocated rows per table
+        self._bufs: list[np.ndarray] = [
             np.zeros((0, hidden), np.float32) for _ in range(num_layers - 1)
         ]
+        self._reallocs = 0                     # growth events (O(log n))
         self.log = TransferLog()
 
     # -- registration ------------------------------------------------------
+
+    def _ensure_capacity(self, rows: int) -> None:
+        """Capacity-doubling growth: amortized O(1) per registered row
+        instead of the quadratic rebuild-every-call np.concatenate."""
+        if rows <= self._cap:
+            return
+        new_cap = max(16, self._cap)
+        while new_cap < rows:
+            new_cap *= 2
+        grown = []
+        for buf in self._bufs:
+            g = np.zeros((new_cap, self.hidden), np.float32)
+            g[: len(self._row)] = buf[: len(self._row)]
+            grown.append(g)
+        self._bufs = grown
+        self._cap = new_cap
+        self._reallocs += 1
 
     def register(self, global_ids: np.ndarray) -> None:
         """Make rows for vertices whose embeddings will be shared."""
@@ -38,10 +62,16 @@ class EmbeddingServer:
         if not new:
             return
         base = len(self._row)
+        self._ensure_capacity(base + len(new))
         for i, gid in enumerate(new):
             self._row[gid] = base + i
-        grow = np.zeros((len(new), self.hidden), np.float32)
-        self._tables = [np.concatenate([t, grow], axis=0) for t in self._tables]
+
+    @property
+    def _tables(self) -> list[np.ndarray]:
+        """Logical (registered-rows) views of the capacity buffers.
+        Writes through a view hit the backing buffer."""
+        n = len(self._row)
+        return [buf[:n] for buf in self._bufs]
 
     @property
     def num_embeddings_stored(self) -> int:
@@ -49,11 +79,37 @@ class EmbeddingServer:
         return len(self._row) * (self.L - 1)
 
     def memory_bytes(self) -> int:
-        return sum(t.nbytes for t in self._tables)
+        """Actual allocation, including capacity-doubling headroom (up to
+        ~2× the registered rows right after a growth event)."""
+        return sum(buf.nbytes for buf in self._bufs)
 
     def _rows(self, global_ids: np.ndarray) -> np.ndarray:
         return np.fromiter((self._row[int(g)] for g in global_ids),
                            dtype=np.int64, count=len(global_ids))
+
+    # -- storage surface (used by repro.exchange transports) ----------------
+
+    def write(self, global_ids: np.ndarray,
+              layer_values: list[np.ndarray]) -> None:
+        """Raw store of h^1..h^{L-1} rows — no wire accounting."""
+        assert len(layer_values) == self.L - 1
+        if len(global_ids) == 0:
+            return
+        rows = self._rows(global_ids)
+        for buf, vals in zip(self._bufs, layer_values):
+            buf[rows] = np.asarray(vals, np.float32)
+
+    def gather(self, global_ids: np.ndarray,
+               layers: list[int] | None = None) -> list[np.ndarray]:
+        """Raw read of the selected layer tables — no wire accounting.
+        ``layers`` is 1-indexed; ``None`` means all L-1; ``[]`` means
+        none (and returns an empty list)."""
+        sel = list(range(1, self.L)) if layers is None else list(layers)
+        if len(global_ids) == 0:
+            return [np.zeros((0, self.hidden), np.float32) for _ in sel]
+        rows = self._rows(global_ids)
+        # fancy indexing already allocates fresh arrays — no copy needed
+        return [self._bufs[l - 1][rows] for l in sel]
 
     # -- RPC surface ---------------------------------------------------------
 
@@ -66,9 +122,7 @@ class EmbeddingServer:
         assert len(layer_values) == self.L - 1
         if len(global_ids) == 0:
             return 0.0
-        rows = self._rows(global_ids)
-        for tbl, vals in zip(self._tables, layer_values):
-            tbl[rows] = np.asarray(vals, np.float32)
+        self.write(global_ids, layer_values)
         t = self.net.transfer_time(len(global_ids), self.hidden, self.L - 1)
         self.log.add(bytes=self.net.embedding_bytes(len(global_ids),
                                                     self.hidden, self.L - 1),
@@ -81,12 +135,11 @@ class EmbeddingServer:
         """Batched pipelined GET.  Returns ([per-layer (n, hidden)], time).
 
         ``layers`` selects which h^l tables to fetch (1-indexed);
-        default all L-1."""
-        sel = layers or list(range(1, self.L))
-        if len(global_ids) == 0:
-            return [np.zeros((0, self.hidden), np.float32) for _ in sel], 0.0
-        rows = self._rows(global_ids)
-        out = [self._tables[l - 1][rows].copy() for l in sel]
+        ``None`` fetches all L-1, an explicit ``[]`` fetches none."""
+        sel = list(range(1, self.L)) if layers is None else list(layers)
+        out = self.gather(global_ids, sel)
+        if len(global_ids) == 0 or len(sel) == 0:
+            return out, 0.0
         t = self.net.transfer_time(len(global_ids), self.hidden, len(sel))
         self.log.add(bytes=self.net.embedding_bytes(len(global_ids),
                                                     self.hidden, len(sel)),

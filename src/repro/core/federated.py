@@ -2,7 +2,9 @@
 
 One process simulates the cross-silo deployment: K client shards train in
 (logical) parallel; the aggregation server FedAvg-aggregates; the
-embedding server mediates remote-embedding exchange.  Compute is
+remote-embedding exchange subsystem (repro.exchange: wire codec × delta
+pushes × transport shards, per Strategy knobs) mediates every pull /
+push / prefetch / dynamic-pull against the embedding store.  Compute is
 *measured* (wall clock of jitted steps); network is *modelled* by
 :class:`NetworkModel` — recorded separately per phase, so every paper
 figure can be regenerated.
@@ -13,7 +15,10 @@ Numerical faithfulness notes:
     *timing*, never the numerics — we fill the client cache at round start
     and account pull time per-strategy.  Pruning and overlap DO change
     numerics and are implemented numerically (smaller expanded subgraph;
-    stale epoch-(ε−1) push embeddings).
+    stale epoch-(ε−1) push embeddings).  Lossy wire codecs (fp16/int8)
+    and τ>0 delta pushes also change numerics — by design, both
+    directions of the wire are honest.  Transport sharding never does
+    (row-independent codecs).
   * Round wall time = max over clients (they run in parallel silos)
     + aggregation/validation (~100 ms in the paper; we measure ours).
 """
@@ -23,11 +28,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+if TYPE_CHECKING:  # break the repro.exchange → repro.core import cycle
+    from repro.exchange import ExchangeClient, PushPlan
 
 from repro.graphs.graph import Graph
 from repro.graphs.partition import (ClientShard, bfs_partition,
@@ -37,7 +45,6 @@ from repro.models import gnn
 from repro.optim import Optimizer, adam
 
 from .cost_model import NetworkModel
-from .embedding_server import EmbeddingServer
 from .pruning import score_remote_nodes, top_fraction
 from .strategies import Strategy
 
@@ -107,6 +114,7 @@ class FederatedGNNTrainer:
         lr: float = 1e-2,
         optimizer: Optimizer | None = None,
         net: NetworkModel | None = None,
+        shard_nets: list[NetworkModel] | None = None,
         seed: int = 0,
         part: np.ndarray | None = None,
     ):
@@ -122,6 +130,9 @@ class FederatedGNNTrainer:
         self.lr = lr
         self.opt = optimizer or adam(lr)
         self.net = net or NetworkModel()
+        # heterogeneous per-shard links (ShardedTransport); default: the
+        # trainer-wide NetworkModel replicated per shard
+        self.shard_nets = shard_nets
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.part = bfs_partition(graph, num_clients, seed=seed) \
@@ -173,13 +184,25 @@ class FederatedGNNTrainer:
                 idx = np.arange(len(sh.pull_nodes))
             self.prefetch_sets.append(idx)
 
-        # embedding server
-        self.server = EmbeddingServer(self.L, self.hidden, self.net) \
-            if st.use_embeddings else None
-        if self.server is not None:
+        # remote-embedding exchange: transport (embedding server shard(s)
+        # behind modelled links) + one codec/delta-aware client per silo
+        from repro.exchange import ExchangeClient, make_transport
+        if st.use_embeddings:
+            self.exchange = make_transport(
+                self.L, self.hidden, num_shards=st.num_server_shards,
+                nets=self.shard_nets if self.shard_nets is not None
+                else self.net)
+            self.ex_clients: list[ExchangeClient | None] = [
+                ExchangeClient(self.exchange, st.codec,
+                               delta_threshold=st.delta_threshold)
+                for _ in shards
+            ]
             for sh in shards:
-                self.server.register(sh.pull_nodes)
-                self.server.register(sh.push_nodes)
+                self.exchange.register(sh.pull_nodes)
+                self.exchange.register(sh.push_nodes)
+        else:
+            self.exchange = None
+            self.ex_clients = [None for _ in shards]
 
         self.samplers = [
             NeighborSampler(sh, self.fanout, self.L, self.batch_size,
@@ -225,18 +248,24 @@ class FederatedGNNTrainer:
 
     # -- embedding exchange helpers ---------------------------------------------
 
+    @property
+    def server(self):
+        """Back-compat alias: the embedding-server side of the exchange
+        (a Transport; exposes num_embeddings_stored / log / memory_bytes)."""
+        return self.exchange
+
     def _fill_cache(self, ci: int) -> None:
         """Materialise this round's pull-node embeddings into the client
-        cache (numerics; timing handled separately)."""
+        cache (numerics; timing handled separately).  Values go through
+        the wire codec, so lossy codecs shape training numerics here."""
         sh = self.shards[ci]
-        if self.server is None or len(sh.pull_nodes) == 0:
+        if self.exchange is None or len(sh.pull_nodes) == 0:
             return
-        rows = self.server._rows(sh.pull_nodes)
+        vals = self.ex_clients[ci].peek(sh.pull_nodes)
+        pad = max(1, sh.num_remote) - sh.num_remote
         self._caches[ci] = [
             jnp.asarray(np.concatenate([
-                self.server._tables[l][rows],
-                np.zeros((max(1, sh.num_remote) - sh.num_remote,
-                          self.hidden), np.float32)]))
+                vals[l], np.zeros((pad, self.hidden), np.float32)]))
             if sh.num_remote else self._caches[ci][l]
             for l in range(self.L - 1)
         ]
@@ -245,39 +274,40 @@ class FederatedGNNTrainer:
         """(upfront pull s, dynamic pull s, nodes-per-dynamic-RPC sizes)."""
         sh = self.shards[ci]
         st = self.strategy
-        if self.server is None or len(sh.pull_nodes) == 0:
+        ex = self.ex_clients[ci]
+        if self.exchange is None or len(sh.pull_nodes) == 0:
             return 0.0, 0.0, []
         if st.prefetch_frac is None:
-            _, t = self.server.pull(sh.pull_nodes)
-            return t, 0.0, []
+            return ex.pull_cost(sh.pull_nodes), 0.0, []
         # §4.3: batched prefetch of top-x% + per-minibatch on-demand RPCs.
         pre = self.prefetch_sets[ci]
-        _, t_pre = self.server.pull(sh.pull_nodes[pre])
+        t_pre = ex.pull_cost(sh.pull_nodes[pre])
         present = [np.zeros(sh.num_remote, bool) for _ in range(self.L - 1)]
         for p in present:
             p[pre] = True
         t_dyn, sizes = 0.0, []
         for mb in minibatches:
-            need = 0
+            miss_gids = []
             for l, used in enumerate(mb.remote_slots_used):
                 miss = used[~present[l][used]]
-                need += len(miss)
+                if len(miss):
+                    # remote slot i ↔ sh.pull_nodes[i] (shard layout:
+                    # global_ids = [local, pull_nodes])
+                    miss_gids.append(sh.pull_nodes[miss])
                 present[l][miss] = True
-            if need:
-                t = self.net.transfer_time(need, self.hidden, 1)
-                self.server.log.add(
-                    bytes=self.net.embedding_bytes(need, self.hidden, 1),
-                    rpcs=1, embeddings=need, seconds=t)
-                t_dyn += t
-                sizes.append(need)
+            if miss_gids:
+                gids = np.concatenate(miss_gids)
+                t_dyn += ex.dynamic_pull(gids)
+                sizes.append(len(gids))
         return t_pre, t_dyn, sizes
 
-    def _compute_push(self, ci: int, params) -> tuple[list[np.ndarray], float, float]:
+    def _compute_push(self, ci: int, params) -> tuple[Optional[PushPlan],
+                                                      float, float]:
         """Forward pass for push-node embeddings (§3.2.2 push phase).
-        Returns (per-layer values, compute s, transfer s)."""
+        Returns (delta-filtered+encoded push plan, compute s, transfer s)."""
         sh = self.shards[ci]
-        if self.server is None or len(sh.push_nodes) == 0:
-            return [], 0.0, 0.0
+        if self.exchange is None or len(sh.push_nodes) == 0:
+            return None, 0.0, 0.0
         t0 = time.perf_counter()
         outs = gnn.full_propagate(params, self.shard_arrays[ci],
                                   self._caches[ci], conv=self.conv)
@@ -287,16 +317,15 @@ class FederatedGNNTrainer:
         rows = np.fromiter((g2l[int(g)] for g in sh.push_nodes), np.int64,
                            len(sh.push_nodes))
         vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
-        t_transfer = self.net.transfer_time(len(sh.push_nodes), self.hidden,
-                                            self.L - 1)
-        return vals, t_compute, t_transfer
+        plan = self.ex_clients[ci].plan_push(sh.push_nodes, vals)
+        return plan, t_compute, plan.transfer_time
 
     # -- lifecycle ---------------------------------------------------------------
 
     def pretrain_round(self) -> None:
         """§3.2.1: initialise push-node embeddings on the unexpanded local
         subgraphs (remote neighbours masked) and seed the server."""
-        if self.server is None:
+        if self.exchange is None:
             return
         for ci, sh in enumerate(self.shards):
             if len(sh.push_nodes) == 0:
@@ -307,7 +336,7 @@ class FederatedGNNTrainer:
             rows = np.fromiter((g2l[int(g)] for g in sh.push_nodes), np.int64,
                                len(sh.push_nodes))
             vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
-            self.server.push(sh.push_nodes, vals)
+            self.ex_clients[ci].push(sh.push_nodes, vals)
 
     def evaluate(self) -> float:
         outs = gnn.full_propagate(self.params, self.eval_arrays, None,
@@ -322,7 +351,7 @@ class FederatedGNNTrainer:
         client_times: list[float] = []
         all_rpc_sizes: list[int] = []
         new_params, weights, losses = [], [], []
-        push_payloads: list[tuple[int, list[np.ndarray]]] = []
+        push_plans: list[tuple[int, PushPlan]] = []
 
         for ci, sh in enumerate(self.shards):
             p = PhaseTimes()
@@ -340,7 +369,7 @@ class FederatedGNNTrainer:
             params = self.params
             opt_state = self.opt.init(params)
             t_train = sample_t
-            push_vals: list[np.ndarray] = []
+            push_plan: Optional[PushPlan] = None
             loss = jnp.zeros(())
             for e, batches in enumerate(epochs_batches, start=1):
                 t0 = time.perf_counter()
@@ -353,17 +382,17 @@ class FederatedGNNTrainer:
                 t_train += time.perf_counter() - t0
                 if st.overlap_push and e == self.epochs - 1:
                     # §4.2: stale push computed from the epoch-(ε−1) model
-                    push_vals, p.push_compute, p.push_transfer = \
+                    push_plan, p.push_compute, p.push_transfer = \
                         self._compute_push(ci, params)
             if not st.overlap_push or self.epochs < 2:
-                push_vals, p.push_compute, p.push_transfer = \
+                push_plan, p.push_compute, p.push_transfer = \
                     self._compute_push(ci, params)
             p.train = t_train
             client_times.append(p.client_total(
                 overlap=st.overlap_push,
                 interference=st.overlap_interference, epochs=self.epochs))
-            if self.server is not None and len(sh.push_nodes):
-                push_payloads.append((ci, push_vals))
+            if push_plan is not None:
+                push_plans.append((ci, push_plan))
             new_params.append(params)
             weights.append(float(len(sh.train_vertices())))
             losses.append(float(loss))
@@ -373,9 +402,9 @@ class FederatedGNNTrainer:
                                           getattr(p, name)))
 
         # all clients pulled before anyone pushes (server is static
-        # within the round) — apply pushes now.
-        for ci, vals in push_payloads:
-            self.server.push(self.shards[ci].push_nodes, vals)
+        # within the round) — apply the planned pushes now.
+        for ci, plan in push_plans:
+            self.ex_clients[ci].apply_push(plan)
 
         # FedAvg + validation on the aggregation server.
         t0 = time.perf_counter()
@@ -396,8 +425,8 @@ class FederatedGNNTrainer:
             cum_time=cum_time + round_time,
             phases=phases,
             pull_rpc_sizes=all_rpc_sizes,
-            embeddings_stored=0 if self.server is None
-            else self.server.num_embeddings_stored,
+            embeddings_stored=0 if self.exchange is None
+            else self.exchange.num_embeddings_stored,
             train_loss=float(np.mean(losses)),
         )
 

@@ -31,11 +31,21 @@ class Strategy:
     # Measured contention: concurrent push slows the final epoch (paper
     # reports +14–32%, Papers +80s).  Applied when overlap_push is on.
     overlap_interference: float = 1.18
+    # -- exchange subsystem (repro.exchange) --------------------------------
+    codec: str = "fp32"                    # wire codec: fp32 | fp16 | int8
+    delta_threshold: Optional[float] = None  # τ delta pushes; None = full
+    num_server_shards: int = 1             # hashed embedding-server shards
 
     def describe(self) -> str:
         bits = [self.name]
         if not self.use_embeddings:
             bits.append("no-embeddings")
+        if self.codec != "fp32":
+            bits.append(self.codec)
+        if self.delta_threshold is not None:
+            bits.append(f"delta_tau={self.delta_threshold:g}")
+        if self.num_server_shards > 1:
+            bits.append(f"shards={self.num_server_shards}")
         if self.retention_limit is not None:
             bits.append(f"P_{self.retention_limit}")
         if self.scored_prune_frac is not None:

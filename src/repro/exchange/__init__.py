@@ -1,0 +1,43 @@
+"""Remote-embedding exchange subsystem.
+
+OptimES's central observation (§4, §5.4) is that remote-embedding
+traffic dominates federated GNN round time.  The seed hard-wired the
+trainer to one in-process embedding server speaking one wire format
+(fp32, full-table push); this package makes the exchange pluggable along
+the three axes communication-layer systems win or lose on:
+
+  codec.py     — wire codecs (fp32 / fp16 / per-row symmetric int8 via
+                 the Pallas quantize kernel).  Extends §5.1's "get/set of
+                 raw embedding vectors" with lossy wire formats whose
+                 byte accounting flows into the §5.4 cost model.
+  delta.py     — τ-thresholded delta pushes: clients shadow their last
+                 pushed rows and re-push only rows that moved.  A
+                 convergence-aware sharpening of the §3.2.2 push phase
+                 (and orthogonal to §4.1 pruning, which shrinks the push
+                 *set* rather than the per-round *selection*).
+  transport.py — Transport ABC with InProcessTransport (the paper's
+                 single Redis instance, §5.1) and ShardedTransport
+                 (vertex ids hashed across S embedding-server shards
+                 with per-shard NetworkModels and TransferLogs — the
+                 scale-out topology §6's future work gestures at).
+  client.py    — ExchangeClient: the per-client facade composing the
+                 three axes; every pull / push / prefetch / dynamic-pull
+                 of the trainer (§3.2.2, §4.2, §4.3) routes through it.
+
+Knobs surface on :class:`repro.core.strategies.Strategy` as ``codec``,
+``delta_threshold``, and ``num_server_shards``; benchmarks/bench_exchange.py
+sweeps the cross-product against the fp32 full-push baseline.
+"""
+
+from .codec import (Fp16Codec, Fp32Codec, Int8Codec, WireCodec,
+                    available_codecs, get_codec)
+from .client import ExchangeClient, PushPlan
+from .delta import DeltaTracker
+from .transport import (InProcessTransport, ShardedTransport, Transport,
+                        make_transport)
+
+__all__ = [
+    "WireCodec", "Fp32Codec", "Fp16Codec", "Int8Codec", "get_codec",
+    "available_codecs", "DeltaTracker", "Transport", "InProcessTransport",
+    "ShardedTransport", "make_transport", "ExchangeClient", "PushPlan",
+]

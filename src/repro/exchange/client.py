@@ -1,0 +1,123 @@
+"""ExchangeClient: the per-client facade over codec × delta × transport.
+
+Every remote-embedding interaction of the federated trainer routes
+through here:
+
+  peek          — cache-fill numerics: the values this client would see
+                  after one wire crossing (codec roundtrip, no charge)
+  pull_cost     — charge one batched upfront GET (§3.2.2 pull phase)
+  dynamic_pull  — charge one on-demand per-minibatch GET (§4.3)
+  plan_push     — delta-filter + encode the push rows and price the SET
+                  without applying it (the server stays static within a
+                  round; §4.2 overlap plans the push mid-round)
+  apply_push    — commit a planned push: store decoded rows, record log
+
+The split between plan and apply mirrors the seed's two-phase push (all
+clients pull before anyone's push lands) while letting the plan's
+modelled transfer time feed the §4.2 overlap timeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .codec import WireCodec, get_codec
+from .delta import DeltaTracker
+from .transport import Transport
+
+
+@dataclasses.dataclass
+class PushPlan:
+    """A priced, not-yet-applied push.  Abandoning a plan has no side
+    effects: the delta shadow is only refreshed when the plan is
+    applied."""
+    global_ids: np.ndarray            # delta-selected rows
+    layer_values: list[np.ndarray]    # decoded fp32 (post codec roundtrip)
+    raw_values: list[np.ndarray]      # pre-codec fp32 (shadow refresh)
+    transfer_time: float
+    n_selected: int
+    n_total: int
+
+
+class ExchangeClient:
+    def __init__(self, transport: Transport, codec: WireCodec | str = "fp32",
+                 *, delta_threshold: float | None = None):
+        self.transport = transport
+        self.codec = get_codec(codec)
+        self.hidden = transport.hidden
+        self.shared_layers = transport.num_layers - 1
+        self.delta = None if delta_threshold is None else DeltaTracker(
+            delta_threshold, self.shared_layers, self.hidden)
+
+    @property
+    def bytes_per_scalar(self) -> float:
+        return self.codec.bytes_per_scalar(self.hidden)
+
+    def register(self, global_ids: np.ndarray) -> None:
+        self.transport.register(global_ids)
+
+    # -- pull side ---------------------------------------------------------
+
+    def peek(self, global_ids: np.ndarray,
+             layers: list[int] | None = None) -> list[np.ndarray]:
+        """Codec-roundtripped table rows, no wire charge (timing is
+        accounted per-strategy by pull_cost/dynamic_pull)."""
+        raw = self.transport.gather(global_ids, layers)
+        return [self.codec.roundtrip(v) for v in raw]
+
+    def pull(self, global_ids: np.ndarray, layers: list[int] | None = None
+             ) -> tuple[list[np.ndarray], float]:
+        """Batched GET: values after the wire + modelled time."""
+        vals = self.peek(global_ids, layers)
+        return vals, self.pull_cost(global_ids, len(vals))
+
+    def pull_cost(self, global_ids: np.ndarray,
+                  layers: int | None = None) -> float:
+        """Charge one batched GET of ``layers`` tables (default all)."""
+        layers = self.shared_layers if layers is None else layers
+        return self.transport.account(global_ids, layers,
+                                      self.bytes_per_scalar)
+
+    def dynamic_pull(self, global_ids: np.ndarray) -> float:
+        """Charge one on-demand miss RPC (one table row per id — ids may
+        repeat across layers)."""
+        return self.transport.account(global_ids, 1, self.bytes_per_scalar)
+
+    # -- push side ---------------------------------------------------------
+
+    def plan_push(self, global_ids: np.ndarray,
+                  layer_values: list[np.ndarray]) -> PushPlan:
+        """Delta-filter, codec-encode, and price a push of
+        h^1..h^{L-1} rows without touching the server."""
+        n_total = len(global_ids)
+        raw = [np.asarray(v, np.float32) for v in layer_values]
+        if self.delta is not None:
+            sel = self.delta.select(global_ids, raw)
+            global_ids = np.asarray(global_ids)[sel]
+            raw = [v[sel] for v in raw]
+        decoded = [self.codec.roundtrip(v) for v in raw]
+        t = self.transport.transfer_time(global_ids, self.shared_layers,
+                                         self.bytes_per_scalar) \
+            if len(global_ids) else 0.0
+        return PushPlan(global_ids=np.asarray(global_ids),
+                        layer_values=decoded, raw_values=raw,
+                        transfer_time=t,
+                        n_selected=len(global_ids), n_total=n_total)
+
+    def apply_push(self, plan: PushPlan) -> float:
+        """Commit a planned push: store what the server decodes, refresh
+        the delta shadow, record the transfer in the shard logs."""
+        if plan.n_selected == 0:
+            return 0.0
+        self.transport.write(plan.global_ids, plan.layer_values)
+        if self.delta is not None:
+            self.delta.commit(plan.global_ids, plan.raw_values)
+        return self.transport.account(plan.global_ids, self.shared_layers,
+                                      self.bytes_per_scalar)
+
+    def push(self, global_ids: np.ndarray,
+             layer_values: list[np.ndarray]) -> float:
+        """Immediate push (pre-training bootstrap, §3.2.1)."""
+        return self.apply_push(self.plan_push(global_ids, layer_values))

@@ -1,0 +1,108 @@
+"""Delta pushes: only ship rows that moved since the last push (τ rule).
+
+As federated training converges, most push-node embeddings barely change
+round-over-round, yet the seed pushes the full table every round.  Each
+client keeps a *shadow* of the raw fp32 values it last pushed; a row is
+re-pushed only when its relative L2 change across all shared layers
+exceeds a threshold τ:
+
+    ||new_row − shadow_row||₂  >  τ · max(||shadow_row||₂, ε)
+
+τ = 0 keeps full-push numerics bit-exactly (rows with literally zero
+change are skipped, and a deterministic codec re-encodes an unchanged
+row to the identical wire value, so the server state is identical);
+τ > 0 trades a bounded staleness for push bytes that shrink as training
+converges.  Rows never pushed before are always selected.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_EPS = 1e-12
+
+
+class DeltaTracker:
+    """Per-client shadow of last-pushed rows, keyed by global vertex id."""
+
+    def __init__(self, threshold: float, num_layers_shared: int, hidden: int):
+        assert threshold >= 0.0
+        self.tau = float(threshold)
+        self.layers = num_layers_shared
+        self.hidden = hidden
+        self._slot: dict[int, int] = {}             # gid -> shadow row
+        self._buf = np.zeros((0, num_layers_shared, hidden), np.float32)
+        # telemetry: (selected, total) row counts per select() call
+        self.history: list[tuple[int, int]] = []
+
+    @property
+    def _shadow(self) -> np.ndarray:
+        return self._buf[: len(self._slot)]
+
+    def _ensure_slots(self, gids: np.ndarray) -> np.ndarray:
+        """Shadow rows for gids, allocating slots for unseen ids.
+        Capacity-doubling growth, like EmbeddingServer.register —
+        amortized O(1) per new id."""
+        new = [int(g) for g in gids if int(g) not in self._slot]
+        if new:
+            base = len(self._slot)
+            if base + len(new) > len(self._buf):
+                cap = max(16, len(self._buf))
+                while cap < base + len(new):
+                    cap *= 2
+                buf = np.zeros((cap, self.layers, self.hidden), np.float32)
+                buf[:base] = self._buf[:base]
+                self._buf = buf
+            for i, g in enumerate(new):
+                self._slot[g] = base + i
+        return np.fromiter((self._slot[int(g)] for g in gids),
+                           np.int64, count=len(gids))
+
+    def select(self, gids: np.ndarray, layer_values: list[np.ndarray]
+               ) -> np.ndarray:
+        """Selection only: boolean mask of rows worth pushing.  Allocates
+        no shadow slots and never mutates row state — call :meth:`commit`
+        when the push lands, so an abandoned plan leaves unseen rows
+        still "never pushed" (and therefore still always selected).
+        ``history`` records one (selected, total) entry per planning
+        pass, applied or not.
+
+        ``layer_values[l]`` is (n, hidden) fp32 aligned with ``gids``."""
+        assert len(layer_values) == self.layers
+        if len(gids) == 0:
+            return np.zeros(0, bool)
+        known = np.fromiter((int(g) in self._slot for g in gids),
+                            bool, count=len(gids))
+        sel = ~known                       # never-pushed rows always go
+        if known.any():
+            stacked = np.stack(
+                [np.asarray(v, np.float32)[known] for v in layer_values],
+                axis=1)                    # (n_known, layers, hidden)
+            rows = np.fromiter((self._slot[int(g)] for g in gids[known]),
+                               np.int64, count=int(known.sum()))
+            old = self._shadow[rows]
+            n = len(rows)
+            delta = np.linalg.norm((stacked - old).reshape(n, -1), axis=1)
+            ref = np.linalg.norm(old.reshape(n, -1), axis=1)
+            sel[known] = delta > self.tau * np.maximum(ref, _EPS)
+        self.history.append((int(sel.sum()), len(gids)))
+        return sel
+
+    def commit(self, gids: np.ndarray,
+               layer_values: list[np.ndarray]) -> None:
+        """Refresh the shadow for rows that actually reached the server
+        (raw pre-codec values, aligned with ``gids``)."""
+        if len(gids) == 0:
+            return
+        stacked = np.stack([np.asarray(v, np.float32) for v in layer_values],
+                           axis=1)
+        rows = self._ensure_slots(gids)
+        self._shadow[rows] = stacked
+
+    @property
+    def total_selected(self) -> int:
+        return sum(s for s, _ in self.history)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(n for _, n in self.history)

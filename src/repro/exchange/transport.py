@@ -1,0 +1,248 @@
+"""Transports: where remote-embedding bytes actually travel.
+
+A :class:`Transport` separates the *storage* of shared embeddings (the
+EmbeddingServer tables) from the *wire model* that charges for moving
+them.  Two implementations:
+
+  InProcessTransport — one embedding server behind one NetworkModel;
+      exactly the seed topology (§5.1's single Redis instance).
+  ShardedTransport   — vertex ids hashed across S embedding-server
+      shards, each with its own NetworkModel (heterogeneous links are a
+      list of models) and its own TransferLog.  Shards serve in
+      parallel, so modelled wall time is the max over shards while
+      bytes/RPCs accumulate per shard.
+
+Time accounting is split into pure ``*_time`` queries (used when a push
+is planned during training but applied later — §4.2 overlap keeps the
+server static within a round) and ``account_*`` calls that also record
+into the shard TransferLogs.
+"""
+
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+from repro.core.cost_model import NetworkModel, TransferLog
+from repro.core.embedding_server import EmbeddingServer
+
+
+class Transport(abc.ABC):
+    """Storage + modelled wire for one federated deployment."""
+
+    num_layers: int
+    hidden: int
+
+    # -- storage -----------------------------------------------------------
+
+    @abc.abstractmethod
+    def register(self, global_ids: np.ndarray) -> None: ...
+
+    @abc.abstractmethod
+    def write(self, global_ids: np.ndarray,
+              layer_values: list[np.ndarray]) -> None:
+        """Raw store of decoded fp32 rows (no accounting)."""
+
+    @abc.abstractmethod
+    def gather(self, global_ids: np.ndarray,
+               layers: list[int] | None = None) -> list[np.ndarray]:
+        """Raw read (no accounting), original id order."""
+
+    # -- modelled wire -----------------------------------------------------
+
+    @abc.abstractmethod
+    def transfer_time(self, global_ids: np.ndarray, layers: int,
+                      bytes_per_scalar: float) -> float:
+        """Pure time query for one batched transfer (no logging)."""
+
+    @abc.abstractmethod
+    def account(self, global_ids: np.ndarray, layers: int,
+                bytes_per_scalar: float) -> float:
+        """Record one batched transfer in the shard logs, return time."""
+
+    # -- telemetry ---------------------------------------------------------
+
+    @property
+    @abc.abstractmethod
+    def shard_logs(self) -> list[TransferLog]: ...
+
+    @property
+    def log(self) -> TransferLog:
+        """Read-only aggregate over all shard logs — a fresh snapshot
+        each access, so writes to it are discarded.  Record traffic via
+        :meth:`account`; per-shard state lives in :attr:`shard_logs`."""
+        total = TransferLog()
+        for lg in self.shard_logs:
+            total.add(bytes=lg.bytes, rpcs=lg.rpcs,
+                      embeddings=lg.embeddings, seconds=lg.seconds)
+        return total
+
+    @property
+    @abc.abstractmethod
+    def num_embeddings_stored(self) -> int: ...
+
+    @abc.abstractmethod
+    def memory_bytes(self) -> int: ...
+
+
+class InProcessTransport(Transport):
+    """Single embedding server behind a single link (seed behavior)."""
+
+    num_shards = 1
+
+    def __init__(self, num_layers: int, hidden: int,
+                 net: NetworkModel | None = None):
+        self.num_layers = num_layers
+        self.hidden = hidden
+        self.net = net or NetworkModel()
+        self.server = EmbeddingServer(num_layers, hidden, self.net)
+        self._log = TransferLog()
+
+    def register(self, global_ids):
+        self.server.register(global_ids)
+
+    def write(self, global_ids, layer_values):
+        self.server.write(global_ids, layer_values)
+
+    def gather(self, global_ids, layers=None):
+        return self.server.gather(global_ids, layers)
+
+    def transfer_time(self, global_ids, layers, bytes_per_scalar):
+        if len(global_ids) == 0 or layers == 0:
+            return 0.0
+        return self.net.transfer_time(len(global_ids), self.hidden, layers,
+                                      bytes_per_scalar=bytes_per_scalar)
+
+    def account(self, global_ids, layers, bytes_per_scalar):
+        t = self.transfer_time(global_ids, layers, bytes_per_scalar)
+        if t == 0.0:
+            return 0.0
+        self._log.add(
+            bytes=self.net.embedding_bytes(len(global_ids), self.hidden,
+                                           layers,
+                                           bytes_per_scalar=bytes_per_scalar),
+            rpcs=1, embeddings=len(global_ids) * layers, seconds=t)
+        return t
+
+    @property
+    def shard_logs(self):
+        return [self._log]
+
+    @property
+    def num_embeddings_stored(self):
+        return self.server.num_embeddings_stored
+
+    def memory_bytes(self):
+        return self.server.memory_bytes()
+
+
+class ShardedTransport(Transport):
+    """Vertex ids hashed across S embedding-server shards.
+
+    ``nets`` gives one NetworkModel per shard (heterogeneous bandwidth);
+    a single model (or None) is replicated.  Because every codec is
+    row-independent, splitting rows across shards never changes the
+    reconstructed values — sharding affects only time/bytes accounting,
+    never numerics."""
+
+    def __init__(self, num_layers: int, hidden: int, num_shards: int,
+                 nets: list[NetworkModel] | NetworkModel | None = None):
+        assert num_shards >= 1
+        self.num_layers = num_layers
+        self.hidden = hidden
+        self.num_shards = num_shards
+        if nets is None or isinstance(nets, NetworkModel):
+            nets = [nets or NetworkModel()] * num_shards
+        assert len(nets) == num_shards, "one NetworkModel per shard"
+        self.nets = list(nets)
+        self.shards = [EmbeddingServer(num_layers, hidden, net)
+                       for net in self.nets]
+        self._logs = [TransferLog() for _ in range(num_shards)]
+
+    def shard_of(self, global_ids: np.ndarray) -> np.ndarray:
+        """Hash placement: vertex id → shard."""
+        return np.asarray(global_ids, np.int64) % self.num_shards
+
+    def _split(self, global_ids: np.ndarray):
+        """→ [(shard, positions-into-global_ids)] for non-empty shards."""
+        global_ids = np.asarray(global_ids)
+        owner = self.shard_of(global_ids)
+        return [(s, np.nonzero(owner == s)[0])
+                for s in range(self.num_shards)
+                if np.any(owner == s)]
+
+    def register(self, global_ids):
+        for s, pos in self._split(global_ids):
+            self.shards[s].register(np.asarray(global_ids)[pos])
+
+    def write(self, global_ids, layer_values):
+        global_ids = np.asarray(global_ids)
+        for s, pos in self._split(global_ids):
+            self.shards[s].write(global_ids[pos],
+                                 [np.asarray(v)[pos] for v in layer_values])
+
+    def gather(self, global_ids, layers=None):
+        sel = list(range(1, self.num_layers)) if layers is None \
+            else list(layers)
+        global_ids = np.asarray(global_ids)
+        out = [np.zeros((len(global_ids), self.hidden), np.float32)
+               for _ in sel]
+        for s, pos in self._split(global_ids):
+            part = self.shards[s].gather(global_ids[pos], sel)
+            for o, p in zip(out, part):
+                o[pos] = p
+        return out
+
+    def _shard_times(self, global_ids, layers, bytes_per_scalar):
+        """[(shard, positions, modelled time)] — the single source both
+        transfer_time and account price from."""
+        return [(s, pos,
+                 self.nets[s].transfer_time(len(pos), self.hidden, layers,
+                                            bytes_per_scalar=bytes_per_scalar))
+                for s, pos in self._split(global_ids)]
+
+    def transfer_time(self, global_ids, layers, bytes_per_scalar):
+        """Shards serve concurrently: wall time is the slowest shard."""
+        if len(global_ids) == 0 or layers == 0:
+            return 0.0
+        return max(t for _, _, t in
+                   self._shard_times(global_ids, layers, bytes_per_scalar))
+
+    def account(self, global_ids, layers, bytes_per_scalar):
+        if len(global_ids) == 0 or layers == 0:
+            return 0.0
+        t_max = 0.0
+        for s, pos, t in self._shard_times(global_ids, layers,
+                                           bytes_per_scalar):
+            self._logs[s].add(
+                bytes=self.nets[s].embedding_bytes(
+                    len(pos), self.hidden, layers,
+                    bytes_per_scalar=bytes_per_scalar),
+                rpcs=1, embeddings=len(pos) * layers, seconds=t)
+            t_max = max(t_max, t)
+        return t_max
+
+    @property
+    def shard_logs(self):
+        return list(self._logs)
+
+    @property
+    def num_embeddings_stored(self):
+        return sum(s.num_embeddings_stored for s in self.shards)
+
+    def memory_bytes(self):
+        return sum(s.memory_bytes() for s in self.shards)
+
+
+def make_transport(num_layers: int, hidden: int, *, num_shards: int = 1,
+                   nets: list[NetworkModel] | NetworkModel | None = None
+                   ) -> Transport:
+    """Factory the trainer uses: 1 shard → seed topology, else hashed."""
+    if num_shards <= 1:
+        if isinstance(nets, list):
+            assert len(nets) == 1, \
+                f"{len(nets)} NetworkModels for a single-shard transport"
+            nets = nets[0]
+        return InProcessTransport(num_layers, hidden, nets)
+    return ShardedTransport(num_layers, hidden, num_shards, nets)

@@ -11,4 +11,6 @@ Kernels:
   swa_attention — sliding-window decode attention (long_500k serve path)
   topk_mask     — sort-free top-k selection for frequency-score pruning /
                   prefetch (§4.1.2, §4.3) at TPU scale
+  quantize      — per-row symmetric int8 quantize/dequantize for the
+                  remote-embedding wire codecs (repro.exchange.codec)
 """

@@ -11,6 +11,7 @@ import jax
 import numpy as np
 
 from . import gnn_aggregate as _agg
+from . import quantize as _quant
 from . import ref
 from . import swa_attention as _swa
 from . import topk_mask as _topk
@@ -43,6 +44,21 @@ def swa_attention_decode(q, k, v, kv_pos, kv_valid, q_pos, *, window,
                                          window=window, interpret=interp)
     return ref.swa_attention_decode(q, k, v, kv_pos, kv_valid, q_pos,
                                     window)
+
+
+def quantize_int8(x, *, use_pallas="auto"):
+    """Per-row symmetric int8 quantize → (values int8, scales fp32 (n,1))."""
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _quant.quantize_int8(x, interpret=interp)
+    return ref.quantize_int8(x)
+
+
+def dequantize_int8(values, scales, *, use_pallas="auto"):
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _quant.dequantize_int8(values, scales, interpret=interp)
+    return ref.dequantize_int8(values, scales)
 
 
 def topk_mask(scores, k, *, use_pallas="auto"):

@@ -1,0 +1,123 @@
+"""Pallas TPU kernels: per-row symmetric int8 quantize / dequantize.
+
+The exchange subsystem's int8 wire codec (repro.exchange.codec) makes
+encode/decode a per-round compute hot path: every push and pull of the
+embedding tables quantizes (n, hidden) fp32 rows to int8 plus one fp32
+scale per row.  At TPU scale (Papers: ~40M boundary rows × 128 features
+per round) that is a pure bandwidth-bound streaming kernel, so we tile
+over rows, keep the full (padded) feature width per block, and fuse
+absmax → scale → round/clip in VMEM — one linear read of the table, one
+linear write of values + scales, no HBM round-trips for the reduction.
+
+Scheme (row-independent by construction — this is what keeps sharded
+transports bit-identical to single-shard ones):
+
+  scale_i = max_j |x_ij| / 127          (0 for all-zero rows)
+  q_ij    = clip(round(x_ij / scale_i), -127, 127)   int8
+  x'_ij   = q_ij * scale_i
+
+Round-to-nearest (ties-to-even, matching jnp.round in the oracle) keeps
+the kernel deterministic, so encode(decode(encode(x))) is stable and
+Pallas-vs-ref parity is exact, not approximate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+ROW_TILE = 256
+LANE = 128
+
+
+def _quantize_kernel(x_ref, v_ref, s_ref):
+    """One (ROW_TILE, H_padded) block: fused absmax + scale + round/clip.
+
+    x_ref: (R, H) fp32; v_ref: (R, H) int8; s_ref: (R, 1) fp32."""
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)        # (R, 1)
+    # multiply by the fp32 reciprocal (not a divide): XLA folds /127 into
+    # a reciprocal-mul under jit but not in the eager oracle — writing the
+    # mul explicitly keeps kernel and oracle bit-identical.
+    scale = absmax * jnp.float32(1.0 / 127.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    v_ref[...] = jnp.clip(jnp.round(x / safe), -127.0, 127.0).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequantize_kernel(v_ref, s_ref, out_ref):
+    """out = values × per-row scale (zero-scale rows stay exactly zero)."""
+    out_ref[...] = v_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _quantize_padded(xp: jax.Array, *, interpret: bool):
+    """Pallas call over ROW_TILE/LANE-aligned input."""
+    R, H = xp.shape
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(R // ROW_TILE,),
+        in_specs=[pl.BlockSpec((ROW_TILE, H), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((ROW_TILE, H), lambda i: (i, 0)),
+                   pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((R, H), jnp.int8),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32)),
+        interpret=interpret,
+    )(xp)
+
+
+def quantize_int8(x: jax.Array, *, interpret: bool = True
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 quantization.
+
+    x: (n, hidden) fp32.  Returns (values (n, hidden) int8,
+    scales (n, 1) fp32).  Rows pad to ROW_TILE, features to the 128-lane
+    boundary; zero padding cannot raise a row's absmax, so padded results
+    slice back exactly.  Padding happens OUTSIDE the jit boundary so
+    delta-filtered pushes (a different n every round) retrace only once
+    per ROW_TILE bucket, not once per row count."""
+    n, h = x.shape
+    if n == 0:  # zero-row grid is illegal in pallas_call; nothing to do
+        return (jnp.zeros((0, h), jnp.int8), jnp.zeros((0, 1), jnp.float32))
+    # pad/slice on the host: a fresh n then costs data movement only,
+    # never a new XLA compile (eager pad/slice compile per exact shape)
+    xp = np.zeros((n + (-n % ROW_TILE), h + (-h % LANE)), np.float32)
+    xp[:n, :h] = np.asarray(x, np.float32)
+    values, scales = _quantize_padded(jnp.asarray(xp), interpret=interpret)
+    return (jnp.asarray(np.asarray(values)[:n, :h]),
+            jnp.asarray(np.asarray(scales)[:n]))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dequantize_padded(vp: jax.Array, sp: jax.Array, *, interpret: bool):
+    R, H = vp.shape
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=(R // ROW_TILE,),
+        in_specs=[pl.BlockSpec((ROW_TILE, H), lambda i: (i, 0)),
+                  pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_TILE, H), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, H), jnp.float32),
+        interpret=interpret,
+    )(vp, sp)
+
+
+def dequantize_int8(values: jax.Array, scales: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """Inverse of :func:`quantize_int8`: (n, hidden) int8 × (n, 1) fp32
+    scales → (n, hidden) fp32.  Same bucketed-padding contract."""
+    n, h = values.shape
+    if n == 0:
+        return jnp.zeros((0, h), jnp.float32)
+    R, H = n + (-n % ROW_TILE), h + (-h % LANE)
+    vp = np.zeros((R, H), np.int8)
+    vp[:n, :h] = np.asarray(values)
+    sp = np.zeros((R, 1), np.float32)
+    sp[:n] = np.asarray(scales, np.float32)
+    out = _dequantize_padded(jnp.asarray(vp), jnp.asarray(sp),
+                             interpret=interpret)
+    return jnp.asarray(np.asarray(out)[:n, :h])

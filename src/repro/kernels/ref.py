@@ -42,6 +42,24 @@ def swa_attention_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, H, dh)
 
 
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric int8 quantization (wire codec, exchange subsystem).
+
+    x: (n, hidden) fp32.  Returns (values int8 (n, hidden),
+    scales fp32 (n, 1)) with scale = row absmax / 127 (0 for zero rows)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
+    # reciprocal-mul, not divide — bit-identical to the Pallas kernel
+    scale = absmax * jnp.float32(1.0 / 127.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(values: jax.Array, scales: jax.Array) -> jax.Array:
+    """values (n, hidden) int8 × scales (n, 1) fp32 → (n, hidden) fp32."""
+    return values.astype(jnp.float32) * scales.astype(jnp.float32)
+
+
 def topk_mask(scores: jax.Array, k: int) -> jax.Array:
     """Boolean mask of the k largest entries (ties broken towards keeping
     ≥ k entries — the threshold semantics the bisection kernel provides)."""

@@ -1,0 +1,95 @@
+"""Deterministic stand-in for the ``hypothesis`` API surface these tests use.
+
+The container may not ship hypothesis; conftest installs this module as
+``sys.modules["hypothesis"]`` so the tier-1 suite still collects and the
+property tests still run — each ``@given`` test is executed for
+``max_examples`` deterministic draws (seeded per example index), which
+keeps the property coverage without shrinking/replay.
+
+Only the constructs the suite uses are provided: ``given``, ``settings``,
+and ``strategies.integers / sampled_from / data``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw_fn(rng)
+
+
+class _DataStrategy(SearchStrategy):
+    """Marker for ``st.data()`` — drawn lazily inside the test body."""
+
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+class _DataObject:
+    def __init__(self, rng: np.random.Generator):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy):
+        return strategy.draw(self._rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def data() -> SearchStrategy:
+    return _DataStrategy()
+
+
+class strategies:  # mirror `from hypothesis import strategies as st`
+    SearchStrategy = SearchStrategy
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    floats = staticmethod(floats)
+    data = staticmethod(data)
+
+
+def given(*strategy_args):
+    def decorate(fn):
+        # deliberately no functools.wraps: pytest must see (*args, **kw)
+        # so it does not try to inject fixtures for the drawn arguments.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hypothesis_max_examples", 10)
+            for example in range(n):
+                rng = np.random.default_rng(0xE5 + 7919 * example)
+                drawn = [s.draw(rng) for s in strategy_args]
+                fn(*args, *drawn, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._hypothesis_max_examples = max_examples
+        return fn
+    return decorate

@@ -1,5 +1,17 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
-single CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+single CPU device; only launch/dryrun.py forces 512 placeholder devices.
+
+If ``hypothesis`` is not installed (the container image does not ship
+it), fall back to the deterministic shim in ``_hypothesis_shim`` so the
+suite still collects and the property tests still run."""
+
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_shim  # conftest's dir is on sys.path (no __init__.py)
+    sys.modules["hypothesis"] = _hypothesis_shim
 
 import numpy as np
 import pytest

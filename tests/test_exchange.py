@@ -1,0 +1,346 @@
+"""Exchange subsystem: codecs, quantize kernel parity, delta pushes,
+sharded transports, and the embedding-server regressions that rode
+along (capacity-doubling register, explicit-empty layer selection)."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EmbeddingServer, FederatedGNNTrainer, NetworkModel,
+                        Strategy, default_strategies)
+from repro.exchange import (DeltaTracker, ExchangeClient, InProcessTransport,
+                            ShardedTransport, available_codecs, get_codec,
+                            make_transport)
+from repro.graphs import make_graph
+from repro.kernels import ops, ref
+from repro.kernels.quantize import dequantize_int8, quantize_int8
+
+
+# -- codecs -------------------------------------------------------------------
+
+def test_codec_registry():
+    assert available_codecs() == ["fp16", "fp32", "int8"]
+    assert get_codec("fp32").bytes_per_scalar(32) == 4.0
+    assert get_codec("fp16").bytes_per_scalar(32) == 2.0
+    assert get_codec("int8").bytes_per_scalar(32) == pytest.approx(1.125)
+    with pytest.raises(ValueError):
+        get_codec("fp8")
+
+
+def test_fp32_roundtrip_identity():
+    x = np.random.default_rng(0).standard_normal((50, 16)).astype(np.float32)
+    np.testing.assert_array_equal(get_codec("fp32").roundtrip(x), x)
+
+
+def test_fp16_exact_on_representable():
+    # fp16-representable values survive the wire bit-exactly
+    x = (np.random.default_rng(1).standard_normal((64, 8))
+         .astype(np.float16).astype(np.float32))
+    got = get_codec("fp16").roundtrip(x)
+    assert got.dtype == np.float32
+    np.testing.assert_array_equal(got, x)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 64), st.integers(0, 10**6))
+def test_int8_roundtrip_error_bound(n, h, seed):
+    # per-row symmetric scheme: |x - decode(encode(x))| <= absmax/254
+    x = (np.random.default_rng(seed).standard_normal((n, h)) * 5
+         ).astype(np.float32)
+    got = get_codec("int8").roundtrip(x)
+    bound = np.abs(x).max(axis=1, keepdims=True) / 254 + 1e-6
+    assert (np.abs(got - x) <= bound).all()
+
+
+def test_int8_zero_rows_stay_zero():
+    got = get_codec("int8").roundtrip(np.zeros((4, 32), np.float32))
+    np.testing.assert_array_equal(got, 0)
+
+
+# -- quantize kernel: Pallas (interpret) vs jnp oracle ------------------------
+
+@pytest.mark.parametrize("n,h", [(1, 1), (7, 32), (300, 32), (257, 129),
+                                 (1024, 200)])
+def test_quantize_pallas_matches_ref(n, h):
+    x = jnp.asarray(np.random.default_rng(n + h).standard_normal((n, h)) * 3,
+                    jnp.float32)
+    pv, ps = quantize_int8(x, interpret=True)
+    rv, rs = ref.quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ps), np.asarray(rs))
+    pd = dequantize_int8(pv, ps, interpret=True)
+    rd = ref.dequantize_int8(rv, rs)
+    np.testing.assert_array_equal(np.asarray(pd), np.asarray(rd))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 400), st.sampled_from([1, 32, 100, 128]),
+       st.integers(0, 10**6))
+def test_quantize_parity_property(n, h, seed):
+    x = jnp.asarray(np.random.default_rng(seed).standard_normal((n, h)),
+                    jnp.float32)
+    pv, ps = quantize_int8(x, interpret=True)
+    rv, rs = ref.quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ps), np.asarray(rs))
+
+
+def test_quantize_zero_rows():
+    """Regression: the Pallas path must handle (0, h) — the delta filter
+    produces empty pushes near convergence."""
+    v, s = quantize_int8(jnp.zeros((0, 16), jnp.float32), interpret=True)
+    assert v.shape == (0, 16) and s.shape == (0, 1)
+    out = dequantize_int8(v, s, interpret=True)
+    assert out.shape == (0, 16)
+    rv, rs = ref.quantize_int8(jnp.zeros((0, 16), jnp.float32))
+    assert rv.shape == (0, 16) and rs.shape == (0, 1)
+
+
+def test_quantize_ops_dispatch():
+    x = jnp.asarray(np.random.default_rng(3).standard_normal((64, 32)),
+                    jnp.float32)
+    av, ascale = ops.quantize_int8(x, use_pallas="auto")
+    bv, bscale = ops.quantize_int8(x, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(av), np.asarray(bv))
+    np.testing.assert_array_equal(np.asarray(ascale), np.asarray(bscale))
+    da = ops.dequantize_int8(av, ascale, use_pallas="auto")
+    db = ops.dequantize_int8(bv, bscale, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+
+
+# -- delta pushes -------------------------------------------------------------
+
+def test_delta_first_push_is_full_then_thresholded():
+    tr = DeltaTracker(0.5, num_layers_shared=2, hidden=4)
+    gids = np.array([10, 20, 30])
+    vals = [np.ones((3, 4), np.float32), np.ones((3, 4), np.float32)]
+    sel = tr.select(gids, vals)
+    assert sel.all()                          # never-pushed rows always go
+    tr.commit(gids[sel], [v[sel] for v in vals])
+    # unchanged → nothing selected
+    assert not tr.select(gids, vals).any()
+    # one row moves 100% (> τ=50%) → only it is re-pushed
+    moved = [v.copy() for v in vals]
+    moved[0][1] *= 2.0
+    sel = tr.select(gids, moved)
+    assert list(gids[sel]) == [20]
+    tr.commit(gids[sel], [v[sel] for v in moved])
+    np.testing.assert_array_equal(tr._shadow[tr._slot[20]][0], moved[0][1])
+    assert tr.total_selected == 4 and tr.total_rows == 9
+
+
+def test_delta_tau0_server_state_bit_exact():
+    """τ=0 delta pushes leave the server bit-identical to full pushes."""
+    rng = np.random.default_rng(0)
+    gids = np.arange(40) * 7
+    full = make_transport(3, 8)
+    delta = make_transport(3, 8)
+    cf = ExchangeClient(full, "fp32")
+    cd = ExchangeClient(delta, "fp32", delta_threshold=0.0)
+    for t in (full, delta):
+        t.register(gids)
+    for _ in range(3):
+        vals = [rng.standard_normal((40, 8)).astype(np.float32)
+                for _ in range(2)]
+        # half the rows repeat the previous values exactly
+        if _ > 0:
+            vals = [np.where(np.arange(40)[:, None] % 2 == 0, prev, v)
+                    for prev, v in zip(prev_vals, vals)]
+        prev_vals = vals
+        cf.push(gids, vals)
+        cd.push(gids, vals)
+    for a, b in zip(full.gather(gids), delta.gather(gids)):
+        np.testing.assert_array_equal(a, b)
+    # and the delta side shipped strictly fewer bytes
+    assert delta.log.bytes < full.log.bytes
+
+
+def test_abandoned_plan_leaves_shadow_consistent():
+    """plan_push is side-effect free: dropping a plan must not leave the
+    delta shadow ahead of the server."""
+    gids = np.arange(8)
+    t = make_transport(3, 4)
+    ex = ExchangeClient(t, "fp32", delta_threshold=0.1)
+    ex.register(gids)
+    v1 = [np.ones((8, 4), np.float32) for _ in range(2)]
+    ex.push(gids, v1)                       # shadow = v1
+    v2 = [v * 3.0 for v in v1]
+    ex.plan_push(gids, v2)                  # planned... and abandoned
+    plan = ex.plan_push(gids, v2)           # must still select all rows
+    assert plan.n_selected == 8
+    ex.apply_push(plan)
+    np.testing.assert_array_equal(t.gather(gids)[0], v2[0])
+    # now the shadow is committed: re-planning selects nothing
+    assert ex.plan_push(gids, v2).n_selected == 0
+    # never-pushed rows stay "never pushed" across abandoned plans, even
+    # all-zero ones whose delta against a zero shadow would be 0
+    ex2 = ExchangeClient(make_transport(3, 4), "fp32", delta_threshold=0.1)
+    ex2.register(gids)
+    zeros = [np.zeros((8, 4), np.float32) for _ in range(2)]
+    ex2.plan_push(gids, zeros)              # abandoned
+    assert ex2.plan_push(gids, zeros).n_selected == 8
+
+
+def test_delta_trainer_tau0_matches_full_bitexact():
+    g = make_graph("reddit", scale=0.1, seed=3)
+    base = default_strategies()["E"]
+    tau0 = dataclasses.replace(base, delta_threshold=0.0)
+    accs = []
+    for strat in (base, tau0):
+        tr = FederatedGNNTrainer(g, 3, strat, batch_size=64, seed=0)
+        accs.append([s.accuracy for s in tr.train(3)])
+    assert accs[0] == accs[1]
+
+
+# -- transports ---------------------------------------------------------------
+
+def _fill(transport, gids, hidden, layers, seed=0):
+    rng = np.random.default_rng(seed)
+    vals = [rng.standard_normal((len(gids), hidden)).astype(np.float32)
+            for _ in range(layers)]
+    transport.register(gids)
+    transport.write(gids, vals)
+    return vals
+
+
+def test_sharded_gather_matches_inprocess():
+    gids = np.random.default_rng(1).permutation(500)[:123]
+    single = InProcessTransport(3, 16)
+    sharded = ShardedTransport(3, 16, 4)
+    v1 = _fill(single, gids, 16, 2, seed=5)
+    _fill(sharded, gids, 16, 2, seed=5)
+    perm = np.random.default_rng(2).permutation(len(gids))
+    got_s = single.gather(gids[perm])
+    got_4 = sharded.gather(gids[perm])
+    for a, b, v in zip(got_s, got_4, v1):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, v[perm])
+
+
+def test_sharded_traffic_split_and_parallel_time():
+    gids = np.arange(400)
+    single = InProcessTransport(3, 32)
+    sharded = ShardedTransport(3, 32, 4)
+    for t in (single, sharded):
+        t.register(gids)
+        t.account(gids, 2, 4.0)
+    logs = sharded.shard_logs
+    assert len(logs) == 4 and all(lg.bytes > 0 for lg in logs)
+    # fp32 byte total is preserved exactly by the split
+    assert sum(lg.bytes for lg in logs) == single.log.bytes
+    assert sharded.log.bytes == single.log.bytes
+    assert sharded.log.rpcs == 4 and single.log.rpcs == 1
+    # shards run in parallel: wall time below the single-link time
+    assert sharded.transfer_time(gids, 2, 4.0) < \
+        single.transfer_time(gids, 2, 4.0)
+
+
+def test_heterogeneous_shard_links():
+    slow = NetworkModel(bandwidth_bytes_per_s=1e6,
+                        rpc_overhead_s=0.1)
+    fast = NetworkModel()
+    tr = ShardedTransport(3, 32, 2, nets=[slow, fast])
+    gids = np.arange(100)
+    tr.register(gids)
+    t = tr.account(gids, 2, 4.0)
+    # the slow link dominates the parallel max
+    assert t == pytest.approx(tr.shard_logs[0].seconds)
+    assert tr.shard_logs[0].seconds > tr.shard_logs[1].seconds
+
+
+def test_sharded_trainer_bit_identical_accuracy():
+    """Acceptance: ShardedTransport(4) == single shard, bit-identical."""
+    g = make_graph("reddit", scale=0.1, seed=3)
+    base = default_strategies()["E"]
+    accs, logs = [], []
+    for shards in (1, 4):
+        strat = dataclasses.replace(base, num_server_shards=shards,
+                                    codec="int8")
+        tr = FederatedGNNTrainer(g, 3, strat, batch_size=64, seed=0)
+        accs.append([s.accuracy for s in tr.train(3)])
+        logs.append(tr.server.log)
+    assert accs[0] == accs[1]
+    assert len(logs) == 2 and logs[1].rpcs > logs[0].rpcs  # split RPCs
+
+
+# -- exchange client ----------------------------------------------------------
+
+def test_client_pull_codec_bytes():
+    gids = np.arange(64)
+    for codec, factor in (("fp32", 1.0), ("fp16", 0.5),
+                          ("int8", 36 / 128)):
+        t = InProcessTransport(3, 32)
+        ex = ExchangeClient(t, codec)
+        ex.register(gids)
+        ex.pull_cost(gids)
+        assert t.log.bytes == int(round(64 * 32 * 2 * 4 * factor))
+
+
+def test_client_pull_values_and_time():
+    """pull() == peek() values + pull_cost() accounting in one call."""
+    gids = np.arange(32)
+    t = InProcessTransport(3, 8)
+    ex = ExchangeClient(t, "fp16")
+    ex.register(gids)
+    vals = [np.random.default_rng(l).standard_normal((32, 8))
+            .astype(np.float32) for l in range(2)]
+    ex.push(gids, vals)
+    bytes_before = t.log.bytes
+    got, tm = ex.pull(gids)
+    assert tm > 0 and t.log.bytes == bytes_before + 32 * 8 * 2 * 2
+    for a, b in zip(got, ex.peek(gids)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_client_plan_apply_push_accounting():
+    gids = np.arange(10)
+    t = InProcessTransport(3, 4)
+    ex = ExchangeClient(t, "fp32")
+    ex.register(gids)
+    vals = [np.ones((10, 4), np.float32) for _ in range(2)]
+    plan = ex.plan_push(gids, vals)
+    assert plan.transfer_time > 0 and t.log.bytes == 0   # planned, not sent
+    ex.apply_push(plan)
+    assert t.log.bytes == 10 * 4 * 2 * 4
+    np.testing.assert_array_equal(t.gather(gids)[0], vals[0])
+
+
+# -- embedding server regressions ---------------------------------------------
+
+def test_register_amortized_growth():
+    srv = EmbeddingServer(3, 8)
+    for i in range(0, 1000, 10):                  # 100 incremental calls
+        srv.register(np.arange(i, i + 10))
+    assert len(srv._row) == 1000
+    assert srv._reallocs <= 8                     # doubling, not per-call
+    vals = [np.random.default_rng(0).standard_normal((1000, 8))
+            .astype(np.float32) for _ in range(2)]
+    ids = np.arange(1000)
+    srv.push(ids, vals)
+    got, _ = srv.pull(ids)
+    for a, b in zip(vals, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pull_empty_layer_selection():
+    """Regression: pull(layers=[]) must mean "no layers", not "all"."""
+    srv = EmbeddingServer(3, 8)
+    ids = np.array([1, 2, 3])
+    srv.register(ids)
+    srv.push(ids, [np.ones((3, 8), np.float32)] * 2)
+    got, t = srv.pull(ids, layers=[])
+    assert got == [] and t == 0.0
+    got_all, _ = srv.pull(ids, layers=None)
+    assert len(got_all) == 2
+
+
+def test_network_model_codec_bytes():
+    net = NetworkModel()
+    assert net.embedding_bytes(10, 32, 2) == 10 * 32 * 2 * 4
+    assert net.embedding_bytes(10, 32, 2, bytes_per_scalar=1.125) == \
+        int(round(10 * 32 * 2 * 1.125))
+    assert net.transfer_time(10, 32, 2, bytes_per_scalar=1.125) < \
+        net.transfer_time(10, 32, 2)
