@@ -1,0 +1,143 @@
+"""Live-wire calibration: modelled vs measured embedding-RPC time.
+
+The paper's §5.4 cost analysis — and every modelled number this repo
+reports — rests on the analytic ``NetworkModel``.  This bench closes
+the loop: it launches real ``repro.launch.embed_server`` listeners on
+loopback, drives batched write/gather RPCs through ``TcpTransport``
+across RPC sizes and two hidden widths, then
+
+  1. verifies the measured on-wire payload bytes match
+     ``NetworkModel.embedding_bytes`` *exactly* for fp32 and int8,
+  2. fits (bandwidth_bytes_per_s, rpc_overhead_s,
+     per_embedding_overhead_s) per codec from the measured samples
+     (``repro.core.cost_model.fit_network_model``), and
+  3. reports the fitted-model vs measured residual per RPC size.
+
+Design notes, learned the honest way: codec encode/decode is real
+per-embedding serialisation work (the §5.4 calibration already folds
+serialisation into ``per_embedding_overhead``) and differs per codec —
+on loopback int8's quantisation compute outweighs its byte savings, so
+a single fit across codecs is mis-specified (it drives the bandwidth
+term negative).  One model per codec, with two hidden widths in the
+sweep so payload bytes and embedding count decouple, is identifiable.
+
+Acceptance (loopback): residual < 50% for batched RPCs of >= 1k rows,
+and zero payload-byte mismatches.
+
+Output CSV rows: ``name,us_per_call,derived`` like every other bench.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import NetworkModel, fit_network_model
+from repro.exchange import TcpTransport, get_codec
+from repro.launch.embed_server import serve_in_thread
+
+from .common import emit
+
+LAYERS = 3                      # L; the server stores L-1 tables
+HIDDENS = (32, 128)
+SIZES = (64, 256, 1024, 4096)
+REPS = 10                       # per (codec, hidden, size), after warmup
+CODECS = ("fp32", "int8")
+
+
+def _drive(transport: TcpTransport, gids: np.ndarray, hidden: int,
+           reps: int, rng: np.random.Generator) -> None:
+    """reps × (write + gather) batched RPCs over the full id set."""
+    for _ in range(reps):
+        vals = [rng.standard_normal((len(gids), hidden)).astype(np.float32)
+                for _ in range(LAYERS - 1)]
+        transport.write(gids, vals)
+        transport.gather(gids)
+
+
+def collect_samples():
+    """→ (mins, byte_mismatches).
+
+    ``mins[(codec, hidden, n, op)] = (payload_bytes, embeddings,
+    min measured s)`` — min over reps is the noise-floor estimate of
+    the deterministic RPC cost (this container shares cores; medians
+    carry multi-ms scheduler stragglers that swamp sub-ms RPCs)."""
+    net0 = NetworkModel()
+    mins: dict = {}
+    mismatches = 0
+    for hidden in HIDDENS:
+        handle = serve_in_thread(LAYERS, hidden)
+        try:
+            for codec_name in CODECS:
+                bps = get_codec(codec_name).bytes_per_scalar(hidden)
+                tr = TcpTransport(LAYERS, hidden, [handle.address],
+                                  codec=codec_name)
+                tr.register(np.arange(max(SIZES)))
+                for n in SIZES:
+                    gids = np.arange(n)
+                    expect = net0.embedding_bytes(
+                        n, hidden, LAYERS - 1, bytes_per_scalar=bps)
+                    _drive(tr, gids, hidden, 2,
+                           np.random.default_rng(0))        # warmup
+                    tr.rpc_samples.clear()
+                    _drive(tr, gids, hidden, REPS,
+                           np.random.default_rng(n))
+                    for s in tr.rpc_samples:
+                        if s.payload_bytes != expect:
+                            mismatches += 1
+                        if s.fanout != 1:   # only clean per-RPC clocks
+                            continue
+                        key = (codec_name, hidden, n, s.op)
+                        prev = mins.get(key)
+                        if prev is None or s.measured_s < prev[2]:
+                            mins[key] = (s.payload_bytes,
+                                         s.n_rows * s.layers, s.measured_s)
+                tr.close()
+        finally:
+            handle.stop()
+    return mins, mismatches
+
+
+def main() -> None:
+    mins, byte_mismatches = collect_samples()
+    emit("wire-bytes-exact", {"median_round_s": 0.0},
+         f"mismatches={byte_mismatches} (payload vs embedding_bytes, "
+         f"codecs={'+'.join(CODECS)})")
+
+    worst_1k = 0.0
+    for codec_name in CODECS:
+        # fit the batched regime (n >= 256): the trainer's upfront pulls
+        # and pushes are thousands of rows per RPC; tiny RPCs are
+        # dispatch-overhead-dominated and reported below but not fitted.
+        rows = [(b, 1, e, t) for (c, _, n, _), (b, e, t) in mins.items()
+                if c == codec_name and n >= 256]
+        fitted = fit_network_model(rows, relative=True)
+        emit(f"fitted-{codec_name}", {"median_round_s": 0.0},
+             f"bandwidth_B_per_s={fitted.bandwidth_bytes_per_s:.3e} "
+             f"rpc_overhead_s={fitted.rpc_overhead_s:.3e} "
+             f"per_embedding_overhead_s="
+             f"{fitted.per_embedding_overhead_s:.3e}")
+        for hidden in HIDDENS:
+            bps = get_codec(codec_name).bytes_per_scalar(hidden)
+            for n in SIZES:
+                ts = [t for (c, h, m, _), (_, _, t) in mins.items()
+                      if c == codec_name and h == hidden and m == n]
+                measured = float(np.mean(ts))   # write-min + gather-min
+                modelled = fitted.transfer_time(n, hidden, LAYERS - 1,
+                                                bytes_per_scalar=bps)
+                resid = abs(modelled - measured) / measured
+                if n >= 1024:
+                    worst_1k = max(worst_1k, resid)
+                emit(f"rpc-{codec_name}-h{hidden}-n{n}",
+                     {"median_round_s": measured},
+                     f"measured_ms={measured * 1e3:.3f} "
+                     f"modelled_ms={modelled * 1e3:.3f} resid={resid:.1%}")
+
+    status = "PASS" if worst_1k < 0.5 and byte_mismatches == 0 else "FAIL"
+    emit("calibration", {"median_round_s": 0.0},
+         f"{status} worst_resid_ge_1k={worst_1k:.1%} (target < 50%)")
+    if status == "FAIL":
+        raise SystemExit(1)          # make the CI gate actually gate
+
+
+if __name__ == "__main__":
+    main()

@@ -57,15 +57,83 @@ class NetworkModel:
 
 @dataclasses.dataclass
 class TransferLog:
-    """Accumulated traffic statistics for one phase/entity."""
+    """Accumulated traffic statistics for one phase/entity.
+
+    ``seconds`` is always the *modelled* time.  Transports that move
+    real bytes (TcpTransport) additionally accumulate the measured wall
+    time of the same RPCs into ``measured_seconds``, so the two can be
+    compared on one ledger; purely modelled transports leave it 0."""
     bytes: int = 0
     rpcs: int = 0
     embeddings: int = 0
     seconds: float = 0.0
+    measured_seconds: float = 0.0
 
     def add(self, *, bytes: int = 0, rpcs: int = 0, embeddings: int = 0,
-            seconds: float = 0.0) -> None:
+            seconds: float = 0.0, measured_seconds: float = 0.0) -> None:
         self.bytes += bytes
         self.rpcs += rpcs
         self.embeddings += embeddings
         self.seconds += seconds
+        self.measured_seconds += measured_seconds
+
+
+def fit_network_model(samples, *, base: NetworkModel | None = None,
+                      relative: bool = False) -> NetworkModel:
+    """Least-squares calibration of the analytic wire model from
+    measured RPCs.
+
+    ``samples`` is an iterable of ``(payload_bytes, n_rpcs,
+    n_embeddings, measured_seconds)`` rows (e.g. unpacked from
+    :class:`repro.exchange.socket_transport.RpcSample`).  Fits
+
+        t  ≈  bytes / bandwidth + rpcs · rpc_overhead
+              + embeddings · per_embedding_overhead
+
+    with all three coefficients constrained non-negative (a negative
+    unconstrained coefficient is dropped and the rest refit — a tiny
+    active-set pass, fine for 3 columns).  ``relative=True`` weights
+    each row by 1/t, minimising *relative* residuals so small RPCs are
+    not drowned out by large ones.
+
+    Identifiability caveats: with a fixed codec and hidden size, bytes
+    and embeddings are collinear — vary the hidden size in the sweep,
+    as ``benchmarks/bench_wire.py`` does.  Fit one model per codec:
+    codec encode/decode cost is real per-embedding serialisation work
+    (§5.4 folds it into ``per_embedding_overhead``), and it differs per
+    codec, so a shared fit across codecs is mis-specified.
+
+    Returns a :class:`NetworkModel` carrying the fitted parameters
+    (``bytes_per_scalar`` copied from ``base``/default: the codec, not
+    the link, decides it).
+    """
+    import numpy as np
+
+    rows = [(float(b), float(r), float(e), float(t))
+            for b, r, e, t in samples]
+    if len(rows) < 3:
+        raise ValueError(f"need >= 3 samples to fit 3 parameters, "
+                         f"got {len(rows)}")
+    A = np.array([[b, r, e] for b, r, e, _ in rows])
+    y = np.array([t for *_, t in rows])
+    if relative:
+        w = 1.0 / np.maximum(y, 1e-12)
+        A = A * w[:, None]
+        y = y * w
+    active = [0, 1, 2]
+    coef = np.zeros(3)
+    while active:
+        sol, *_ = np.linalg.lstsq(A[:, active], y, rcond=None)
+        if (sol >= 0).all():
+            coef[:] = 0.0
+            coef[active] = sol
+            break
+        active = [c for c, v in zip(active, sol) if v >= 0]
+    base = base or NetworkModel()
+    inv_bw, rpc_oh, emb_oh = coef
+    return NetworkModel(
+        bandwidth_bytes_per_s=(1.0 / inv_bw) if inv_bw > 0 else float("inf"),
+        rpc_overhead_s=float(rpc_oh),
+        per_embedding_overhead_s=float(emb_oh),
+        bytes_per_scalar=base.bytes_per_scalar,
+    )

@@ -84,8 +84,20 @@ class EmbeddingServer:
         return sum(buf.nbytes for buf in self._bufs)
 
     def _rows(self, global_ids: np.ndarray) -> np.ndarray:
-        return np.fromiter((self._row[int(g)] for g in global_ids),
-                           dtype=np.int64, count=len(global_ids))
+        try:
+            return np.fromiter((self._row[int(g)] for g in global_ids),
+                               dtype=np.int64, count=len(global_ids))
+        except KeyError:
+            missing = [int(g) for g in global_ids
+                       if int(g) not in self._row]
+            shown = ", ".join(str(g) for g in missing[:8])
+            if len(missing) > 8:
+                shown += f", ... ({len(missing) - 8} more)"
+            raise KeyError(
+                f"{len(missing)} unregistered vertex id(s) in a request "
+                f"of {len(global_ids)} (gids: {shown}); this server has "
+                f"{len(self._row)} registered rows — register() boundary "
+                "vertices before write/gather") from None
 
     # -- storage surface (used by repro.exchange transports) ----------------
 

@@ -115,6 +115,7 @@ class FederatedGNNTrainer:
         optimizer: Optimizer | None = None,
         net: NetworkModel | None = None,
         shard_nets: list[NetworkModel] | None = None,
+        transport_addrs: list | None = None,
         seed: int = 0,
         part: np.ndarray | None = None,
     ):
@@ -133,6 +134,9 @@ class FederatedGNNTrainer:
         # heterogeneous per-shard links (ShardedTransport); default: the
         # trainer-wide NetworkModel replicated per shard
         self.shard_nets = shard_nets
+        # live embed_server listeners, one per shard (Strategy.transport
+        # = "tcp", or inferred when addresses are given)
+        self.transport_addrs = transport_addrs
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.part = bfs_partition(graph, num_clients, seed=seed) \
@@ -173,6 +177,17 @@ class FederatedGNNTrainer:
             sh.push_nodes = np.unique(np.concatenate(wanted)) \
                 if wanted else np.zeros(0, np.int64)
 
+        # push-node local-row indices, hoisted: both push paths
+        # (pretrain_round, _compute_push) used to rebuild the
+        # global→local dict per client per round, O(num_local) each time.
+        self.push_rows: list[np.ndarray] = []
+        for sh in shards:
+            g2l = {int(g): i
+                   for i, g in enumerate(sh.global_ids[:sh.num_local])}
+            self.push_rows.append(
+                np.fromiter((g2l[int(g)] for g in sh.push_nodes),
+                            np.int64, len(sh.push_nodes)))
+
         # prefetch scores (§4.3) on the final expanded shard
         self.prefetch_sets: list[np.ndarray] = []
         for sh in shards:
@@ -189,9 +204,11 @@ class FederatedGNNTrainer:
         from repro.exchange import ExchangeClient, make_transport
         if st.use_embeddings:
             self.exchange = make_transport(
-                self.L, self.hidden, num_shards=st.num_server_shards,
+                self.L, self.hidden, kind=st.transport,
+                num_shards=st.num_server_shards,
                 nets=self.shard_nets if self.shard_nets is not None
-                else self.net)
+                else self.net,
+                addrs=self.transport_addrs, codec=st.codec)
             self.ex_clients: list[ExchangeClient | None] = [
                 ExchangeClient(self.exchange, st.codec,
                                delta_threshold=st.delta_threshold)
@@ -313,9 +330,7 @@ class FederatedGNNTrainer:
                                   self._caches[ci], conv=self.conv)
         jax.block_until_ready(outs)
         t_compute = time.perf_counter() - t0
-        g2l = {int(g): i for i, g in enumerate(sh.global_ids[:sh.num_local])}
-        rows = np.fromiter((g2l[int(g)] for g in sh.push_nodes), np.int64,
-                           len(sh.push_nodes))
+        rows = self.push_rows[ci]
         vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
         plan = self.ex_clients[ci].plan_push(sh.push_nodes, vals)
         return plan, t_compute, plan.transfer_time
@@ -332,9 +347,7 @@ class FederatedGNNTrainer:
                 continue
             outs = gnn.full_propagate(self.params, self.shard_arrays[ci],
                                       None, conv=self.conv)
-            g2l = {int(g): i for i, g in enumerate(sh.global_ids[:sh.num_local])}
-            rows = np.fromiter((g2l[int(g)] for g in sh.push_nodes), np.int64,
-                               len(sh.push_nodes))
+            rows = self.push_rows[ci]
             vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
             self.ex_clients[ci].push(sh.push_nodes, vals)
 

@@ -35,6 +35,11 @@ class Strategy:
     codec: str = "fp32"                    # wire codec: fp32 | fp16 | int8
     delta_threshold: Optional[float] = None  # τ delta pushes; None = full
     num_server_shards: int = 1             # hashed embedding-server shards
+    # transport kind: auto | inprocess | sharded | tcp.  "auto" infers
+    # from num_server_shards / the trainer's transport_addrs; "tcp"
+    # needs live embed_server listeners (repro.launch.embed_server) and
+    # the trainer's transport_addrs pointing at them.
+    transport: str = "auto"
 
     def describe(self) -> str:
         bits = [self.name]
@@ -46,6 +51,8 @@ class Strategy:
             bits.append(f"delta_tau={self.delta_threshold:g}")
         if self.num_server_shards > 1:
             bits.append(f"shards={self.num_server_shards}")
+        if self.transport != "auto":
+            bits.append(f"wire={self.transport}")
         if self.retention_limit is not None:
             bits.append(f"P_{self.retention_limit}")
         if self.scored_prune_frac is not None:

@@ -20,6 +20,14 @@ the three axes communication-layer systems win or lose on:
                  (vertex ids hashed across S embedding-server shards
                  with per-shard NetworkModels and TransferLogs — the
                  scale-out topology §6's future work gestures at).
+  wire.py      — length-prefixed binary protocol: codec payload blocks
+                 (fp32/fp16/int8+scales) framed exactly as the bytes
+                 NetworkModel.embedding_bytes charges for.
+  socket_transport.py — TcpTransport: the wire protocol over live
+                 repro.launch.embed_server shards, with connection
+                 pooling, pipelined multi-shard RPCs, and per-RPC
+                 measured-vs-modelled samples for calibration
+                 (benchmarks/bench_wire.py).
   client.py    — ExchangeClient: the per-client facade composing the
                  three axes; every pull / push / prefetch / dynamic-pull
                  of the trainer (§3.2.2, §4.2, §4.3) routes through it.
@@ -36,8 +44,20 @@ from .delta import DeltaTracker
 from .transport import (InProcessTransport, ShardedTransport, Transport,
                         make_transport)
 
+# socket machinery resolves lazily (PEP 562), matching make_transport's
+# lazy import: a modelled-only run never pays for it.
+_SOCKET_EXPORTS = ("TcpTransport", "RpcSample", "parse_address")
+
 __all__ = [
     "WireCodec", "Fp32Codec", "Fp16Codec", "Int8Codec", "get_codec",
     "available_codecs", "DeltaTracker", "Transport", "InProcessTransport",
-    "ShardedTransport", "make_transport", "ExchangeClient", "PushPlan",
+    "ShardedTransport", "TcpTransport", "RpcSample", "parse_address",
+    "make_transport", "ExchangeClient", "PushPlan",
 ]
+
+
+def __getattr__(name):
+    if name in _SOCKET_EXPORTS:
+        from . import socket_transport
+        return getattr(socket_transport, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -46,6 +46,13 @@ class ExchangeClient:
                  *, delta_threshold: float | None = None):
         self.transport = transport
         self.codec = get_codec(codec)
+        if transport.wire_is_real:
+            t_codec = getattr(transport, "codec", None)
+            if t_codec is not None and t_codec.name != self.codec.name:
+                raise ValueError(
+                    f"client codec {self.codec.name!r} != real-wire "
+                    f"transport codec {t_codec.name!r}: the wire would "
+                    "carry different bytes than the client accounts for")
         self.hidden = transport.hidden
         self.shared_layers = transport.num_layers - 1
         self.delta = None if delta_threshold is None else DeltaTracker(
@@ -62,9 +69,15 @@ class ExchangeClient:
 
     def peek(self, global_ids: np.ndarray,
              layers: list[int] | None = None) -> list[np.ndarray]:
-        """Codec-roundtripped table rows, no wire charge (timing is
-        accounted per-strategy by pull_cost/dynamic_pull)."""
+        """Table rows as seen after one wire crossing, no wire charge
+        (timing is accounted per-strategy by pull_cost/dynamic_pull).
+        Modelled transports return raw table rows, so the crossing is
+        simulated with a codec roundtrip here; a real-wire transport
+        (TcpTransport) already codec-encoded the gather on the socket,
+        and a second roundtrip would double-quantize."""
         raw = self.transport.gather(global_ids, layers)
+        if self.transport.wire_is_real:
+            return [np.asarray(v, np.float32) for v in raw]
         return [self.codec.roundtrip(v) for v in raw]
 
     def pull(self, global_ids: np.ndarray, layers: list[int] | None = None
@@ -97,7 +110,11 @@ class ExchangeClient:
             sel = self.delta.select(global_ids, raw)
             global_ids = np.asarray(global_ids)[sel]
             raw = [v[sel] for v in raw]
-        decoded = [self.codec.roundtrip(v) for v in raw]
+        # A real-wire transport codec-encodes the write on the socket —
+        # the server decodes the actual payload bytes; roundtripping here
+        # too would cross the (lossy) wire twice.
+        decoded = raw if self.transport.wire_is_real \
+            else [self.codec.roundtrip(v) for v in raw]
         t = self.transport.transfer_time(global_ids, self.shared_layers,
                                          self.bytes_per_scalar) \
             if len(global_ids) else 0.0

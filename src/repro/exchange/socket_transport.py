@@ -1,0 +1,350 @@
+"""TcpTransport: a Transport whose bytes actually cross a socket.
+
+Speaks the :mod:`repro.exchange.wire` protocol against one
+``repro.launch.embed_server`` listener per shard.  Vertex ids hash
+across shards exactly like :class:`ShardedTransport` (``gid % S``), and
+every codec is row-independent, so the stored state — and therefore
+training numerics — is bit-identical to the in-process transports.
+
+Connection pooling: one persistent socket per shard, opened lazily and
+reopened on failure.  Multi-shard RPCs are *pipelined*: all shard
+request frames are written before any response is read, so shards serve
+concurrently just like the modelled ``max``-over-shards wall time
+assumes.
+
+Two ledgers per shard, deliberately separate:
+
+  ``shard_logs``  — the *modelled* ledger, written by :meth:`account`
+      with NetworkModel prices.  Identical semantics to the in-process
+      transports, so trainer timelines stay comparable across
+      transports.
+  ``wire_logs``   — the *measured* ledger: every real RPC records its
+      payload bytes plus both its measured wall time
+      (``measured_seconds``) and the NetworkModel's modelled time for
+      the same payload (``seconds``).
+
+Per-RPC granularity lands in :attr:`rpc_samples`
+(:class:`RpcSample`), which ``benchmarks/bench_wire.py`` feeds to
+:func:`repro.core.cost_model.fit_network_model` to calibrate
+(bandwidth, RPC overhead, per-embedding overhead) on live loopback
+measurements.  Only ``fanout == 1`` samples carry clean per-RPC
+timing — see :class:`RpcSample`.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import socket
+import time
+
+import numpy as np
+
+from repro.core.cost_model import NetworkModel, TransferLog
+
+from . import wire
+from .codec import WireCodec, get_codec
+from .transport import HashShardedWire, Transport
+
+
+@dataclasses.dataclass(frozen=True)
+class RpcSample:
+    """One real RPC: what moved, what it cost, what the model says.
+
+    ``measured_s`` is clean per-RPC time only when ``fanout == 1``: in
+    a pipelined multi-shard fan-out, responses are read in shard order,
+    so a later shard's clock includes earlier shards' send/read time.
+    Calibration fits (benchmarks/bench_wire.py) must use fanout-1
+    samples; multi-shard samples still bound the fan-out wall time."""
+    op: str                    # register | write | gather
+    shard: int
+    fanout: int                # shards in this RPC's pipelined fan-out
+    n_rows: int
+    layers: int
+    payload_bytes: int         # codec payload only (== embedding_bytes)
+    frame_bytes: int           # full frames incl. headers/gids, both ways
+    measured_s: float          # wall time, send-start → response-read
+    modelled_s: float          # NetworkModel.transfer_time for the payload
+
+
+def parse_address(addr) -> tuple[str, int]:
+    """('host', port) | 'host:port' | ':port' → ('host', port)."""
+    if isinstance(addr, (tuple, list)):
+        host, port = addr
+        return (host or "127.0.0.1", int(port))
+    host, _, port = str(addr).rpartition(":")
+    return (host or "127.0.0.1", int(port))
+
+
+#: rpc_samples window: enough for any calibration sweep, bounded so a
+#: long training run cannot grow memory linearly with rounds.
+MAX_RPC_SAMPLES = 65536
+
+
+class TcpTransport(HashShardedWire, Transport):
+    """Embedding storage behind live TCP embedding-server shards."""
+
+    wire_is_real = True
+
+    def __init__(self, num_layers: int, hidden: int, addrs,
+                 *, codec: WireCodec | str = "fp32",
+                 nets: list[NetworkModel] | NetworkModel | None = None,
+                 connect_timeout: float = 5.0):
+        if not addrs:
+            raise ValueError("TcpTransport needs at least one "
+                             "(host, port) shard address")
+        self.num_layers = num_layers
+        self.hidden = hidden
+        self.addrs = [parse_address(a) for a in addrs]
+        self.num_shards = len(self.addrs)
+        self.codec = get_codec(codec)
+        if nets is None or isinstance(nets, NetworkModel):
+            nets = [nets or NetworkModel()] * self.num_shards
+        assert len(nets) == self.num_shards, "one NetworkModel per shard"
+        self.nets = list(nets)
+        self.connect_timeout = connect_timeout
+        self._socks: list[socket.socket | None] = [None] * self.num_shards
+        self._logs = [TransferLog() for _ in range(self.num_shards)]
+        self._wire_logs = [TransferLog() for _ in range(self.num_shards)]
+        self.rpc_samples: collections.deque[RpcSample] = \
+            collections.deque(maxlen=MAX_RPC_SAMPLES)
+        self._validate_servers()
+
+    def _validate_servers(self) -> None:
+        """Fail fast on a (num_layers, hidden) mismatch instead of a
+        confusing payload-size error mid-round."""
+        for s, st in enumerate(self._stats()):
+            if (st["num_layers"], st["hidden"]) != (self.num_layers,
+                                                    self.hidden):
+                raise ValueError(
+                    f"embed-server shard {s} at "
+                    f"{self.addrs[s][0]}:{self.addrs[s][1]} serves "
+                    f"L={st['num_layers']}, hidden={st['hidden']} but "
+                    f"this transport expects L={self.num_layers}, "
+                    f"hidden={self.hidden} — relaunch the server with "
+                    "matching --num-layers/--hidden")
+
+    # -- connection pool ---------------------------------------------------
+
+    def _conn(self, s: int) -> socket.socket:
+        sock = self._socks[s]
+        if sock is not None:
+            return sock
+        sock = socket.create_connection(self.addrs[s],
+                                        timeout=self.connect_timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.settimeout(None)
+        self._socks[s] = sock
+        return sock
+
+    def _drop(self, s: int) -> None:
+        if self._socks[s] is not None:
+            try:
+                self._socks[s].close()
+            except OSError:
+                pass
+            self._socks[s] = None
+
+    def close(self) -> None:
+        for s in range(self.num_shards):
+            self._drop(s)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def shutdown_servers(self) -> None:
+        """Ask every shard listener to exit (tests / bench teardown)."""
+        for s in range(self.num_shards):
+            try:
+                wire.parse_response(self._roundtrip(s, wire.build_shutdown()))
+            except (ConnectionError, OSError, RuntimeError):
+                pass
+        self.close()
+
+    # -- framing -----------------------------------------------------------
+
+    def _roundtrip(self, s: int, body: bytes) -> bytes:
+        """Single-shard RPC with one transparent reconnect: a pooled
+        socket may have died since the last round."""
+        for attempt in (0, 1):
+            try:
+                sock = self._conn(s)
+                wire.send_frame(sock, body)
+                resp = wire.recv_frame(sock)
+                if resp is None:
+                    raise ConnectionError("server closed connection")
+                return resp
+            except (ConnectionError, OSError):
+                self._drop(s)
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")
+
+    def _rpc_many(self, reqs: list[tuple[int, bytes]]
+                  ) -> list[tuple[bytes, float]]:
+        """Pipelined fan-out: write every shard's request frame, then
+        read responses in order.  Returns [(response body, measured s)]
+        where each shard's clock runs send-start → its response read.
+
+        Failure discipline: on ANY send/recv error, every socket in
+        this fan-out is dropped — a pooled socket with an unread
+        in-flight response would satisfy the *next* RPC with stale
+        bytes.  The whole fan-out is then retried once from scratch:
+        register/write/gather are idempotent, so a shard that already
+        served the first attempt just serves it again."""
+        for attempt in (0, 1):
+            try:
+                return self._rpc_many_once(reqs)
+            except (ConnectionError, OSError):
+                for s, _ in reqs:
+                    self._drop(s)
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")
+
+    def _rpc_many_once(self, reqs: list[tuple[int, bytes]]
+                       ) -> list[tuple[bytes, float]]:
+        t0: dict[int, float] = {}
+        for s, body in reqs:
+            t0[s] = time.perf_counter()
+            wire.send_frame(self._conn(s), body)
+        out = []
+        for s, body in reqs:
+            resp = wire.recv_frame(self._socks[s])
+            if resp is None:
+                raise ConnectionError(
+                    f"embed-server shard {s} {self.addrs[s]} closed "
+                    "connection")
+            out.append((resp, time.perf_counter() - t0[s]))
+        return out
+
+    # shard placement + modelled transfer_time/account/shard_logs are
+    # inherited from HashShardedWire — identical by construction to
+    # ShardedTransport, which is what keeps TCP bit-compatible.
+
+    # -- ledgers -----------------------------------------------------------
+
+    def _record(self, op: str, s: int, n: int, layers: int,
+                payload_bytes: int, frame_bytes: int,
+                measured_s: float, fanout: int = 1) -> None:
+        if op == "register":
+            # ids only, no embedding payload: the model folds this into
+            # per-RPC overhead plus raw id bytes on the wire.
+            modelled = self.nets[s].rpc_overhead_s \
+                + 8 * n / self.nets[s].bandwidth_bytes_per_s
+        else:
+            modelled = self.nets[s].transfer_time(
+                n, self.hidden, layers,
+                bytes_per_scalar=self.codec.bytes_per_scalar(self.hidden))
+        self._wire_logs[s].add(bytes=payload_bytes, rpcs=1,
+                               embeddings=n * layers, seconds=modelled,
+                               measured_seconds=measured_s)
+        self.rpc_samples.append(RpcSample(
+            op=op, shard=s, fanout=fanout, n_rows=n, layers=layers,
+            payload_bytes=payload_bytes, frame_bytes=frame_bytes,
+            measured_s=measured_s, modelled_s=modelled))
+
+    # -- storage surface ---------------------------------------------------
+
+    def register(self, global_ids):
+        global_ids = np.asarray(global_ids)
+        if len(global_ids) == 0:
+            return
+        parts = self._split(global_ids)
+        reqs = [(s, wire.build_register(global_ids[pos])) for s, pos in parts]
+        resps = self._rpc_many(reqs)
+        for (s, pos), (_, body), (resp, dt) in zip(parts, reqs, resps):
+            wire.parse_response(resp)
+            self._record("register", s, len(pos), 0, 0,
+                         wire.frame_nbytes(len(body))
+                         + wire.frame_nbytes(len(resp)), dt,
+                         fanout=len(parts))
+
+    def write(self, global_ids, layer_values):
+        global_ids = np.asarray(global_ids)
+        if len(global_ids) == 0:
+            return
+        name = self.codec.name
+        parts = self._split(global_ids)
+        reqs, payloads = [], []
+        for s, pos in parts:
+            blocks = [wire.encode_block(
+                name, self.codec.encode(np.asarray(v, np.float32)[pos]))
+                for v in layer_values]
+            payloads.append(sum(len(b) for b in blocks))
+            reqs.append((s, wire.build_write(name, global_ids[pos], blocks)))
+        resps = self._rpc_many(reqs)
+        for (s, pos), pay, (_, body), (resp, dt) in zip(parts, payloads,
+                                                        reqs, resps):
+            wire.parse_response(resp)
+            self._record("write", s, len(pos), len(layer_values), pay,
+                         wire.frame_nbytes(len(body))
+                         + wire.frame_nbytes(len(resp)), dt,
+                         fanout=len(parts))
+
+    def gather(self, global_ids, layers=None):
+        sel = list(range(1, self.num_layers)) if layers is None \
+            else list(layers)
+        global_ids = np.asarray(global_ids)
+        out = [np.zeros((len(global_ids), self.hidden), np.float32)
+               for _ in sel]
+        if len(global_ids) == 0 or not sel:
+            return out
+        name = self.codec.name
+        parts = self._split(global_ids)
+        reqs = [(s, wire.build_gather(name, global_ids[pos], sel))
+                for s, pos in parts]
+        resps = self._rpc_many(reqs)
+        for (s, pos), (_, body), (resp, dt) in zip(parts, reqs, resps):
+            payload = wire.parse_response(resp)
+            n = len(pos)
+            block = wire.payload_nbytes(name, n, self.hidden)
+            if len(payload) != block * len(sel):
+                raise ConnectionError(
+                    f"gather reply from shard {s} is {len(payload)} B, "
+                    f"expected {block * len(sel)} B")
+            for i in range(len(sel)):
+                part = self.codec.decode(wire.decode_block(
+                    name, payload[i * block:(i + 1) * block],
+                    n, self.hidden))
+                out[i][pos] = np.asarray(part, np.float32)
+            self._record("gather", s, n, len(sel), len(payload),
+                         wire.frame_nbytes(len(body))
+                         + wire.frame_nbytes(len(resp)), dt,
+                         fanout=len(parts))
+        return out
+
+    # -- telemetry ---------------------------------------------------------
+
+    @property
+    def wire_logs(self) -> list[TransferLog]:
+        """Measured per-shard ledgers (real RPCs; payload bytes only)."""
+        return list(self._wire_logs)
+
+    @property
+    def wire_log(self) -> TransferLog:
+        total = TransferLog()
+        for lg in self._wire_logs:
+            total.add(bytes=lg.bytes, rpcs=lg.rpcs,
+                      embeddings=lg.embeddings, seconds=lg.seconds,
+                      measured_seconds=lg.measured_seconds)
+        return total
+
+    def _stats(self) -> list[dict]:
+        out = []
+        for s in range(self.num_shards):
+            payload = wire.parse_response(
+                self._roundtrip(s, wire.build_stats()))
+            out.append(wire.parse_stats_payload(bytes(payload)))
+        return out
+
+    @property
+    def num_embeddings_stored(self) -> int:
+        return sum(st["rows"] * (st["num_layers"] - 1)
+                   for st in self._stats())
+
+    def memory_bytes(self) -> int:
+        return sum(st["memory_bytes"] for st in self._stats())

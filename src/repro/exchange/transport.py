@@ -34,6 +34,12 @@ class Transport(abc.ABC):
     num_layers: int
     hidden: int
 
+    #: True when :meth:`gather`/:meth:`write` already move codec bytes
+    #: across a real wire (TcpTransport).  ExchangeClient then skips its
+    #: simulated codec roundtrip on pull — the crossing actually
+    #: happened — keeping numerics bit-identical to modelled transports.
+    wire_is_real: bool = False
+
     # -- storage -----------------------------------------------------------
 
     @abc.abstractmethod
@@ -75,7 +81,8 @@ class Transport(abc.ABC):
         total = TransferLog()
         for lg in self.shard_logs:
             total.add(bytes=lg.bytes, rpcs=lg.rpcs,
-                      embeddings=lg.embeddings, seconds=lg.seconds)
+                      embeddings=lg.embeddings, seconds=lg.seconds,
+                      measured_seconds=lg.measured_seconds)
         return total
 
     @property
@@ -137,28 +144,18 @@ class InProcessTransport(Transport):
         return self.server.memory_bytes()
 
 
-class ShardedTransport(Transport):
-    """Vertex ids hashed across S embedding-server shards.
+class HashShardedWire:
+    """Hash placement + per-shard modelled accounting, shared by every
+    multi-shard transport (ShardedTransport, TcpTransport) so placement
+    and pricing can never diverge between the modelled and real wires.
 
-    ``nets`` gives one NetworkModel per shard (heterogeneous bandwidth);
-    a single model (or None) is replicated.  Because every codec is
-    row-independent, splitting rows across shards never changes the
-    reconstructed values — sharding affects only time/bytes accounting,
-    never numerics."""
+    Expects ``num_shards``, ``hidden``, ``nets`` (one NetworkModel per
+    shard) and ``_logs`` (one TransferLog per shard) on the instance."""
 
-    def __init__(self, num_layers: int, hidden: int, num_shards: int,
-                 nets: list[NetworkModel] | NetworkModel | None = None):
-        assert num_shards >= 1
-        self.num_layers = num_layers
-        self.hidden = hidden
-        self.num_shards = num_shards
-        if nets is None or isinstance(nets, NetworkModel):
-            nets = [nets or NetworkModel()] * num_shards
-        assert len(nets) == num_shards, "one NetworkModel per shard"
-        self.nets = list(nets)
-        self.shards = [EmbeddingServer(num_layers, hidden, net)
-                       for net in self.nets]
-        self._logs = [TransferLog() for _ in range(num_shards)]
+    num_shards: int
+    hidden: int
+    nets: list[NetworkModel]
+    _logs: list[TransferLog]
 
     def shard_of(self, global_ids: np.ndarray) -> np.ndarray:
         """Hash placement: vertex id → shard."""
@@ -171,28 +168,6 @@ class ShardedTransport(Transport):
         return [(s, np.nonzero(owner == s)[0])
                 for s in range(self.num_shards)
                 if np.any(owner == s)]
-
-    def register(self, global_ids):
-        for s, pos in self._split(global_ids):
-            self.shards[s].register(np.asarray(global_ids)[pos])
-
-    def write(self, global_ids, layer_values):
-        global_ids = np.asarray(global_ids)
-        for s, pos in self._split(global_ids):
-            self.shards[s].write(global_ids[pos],
-                                 [np.asarray(v)[pos] for v in layer_values])
-
-    def gather(self, global_ids, layers=None):
-        sel = list(range(1, self.num_layers)) if layers is None \
-            else list(layers)
-        global_ids = np.asarray(global_ids)
-        out = [np.zeros((len(global_ids), self.hidden), np.float32)
-               for _ in sel]
-        for s, pos in self._split(global_ids):
-            part = self.shards[s].gather(global_ids[pos], sel)
-            for o, p in zip(out, part):
-                o[pos] = p
-        return out
 
     def _shard_times(self, global_ids, layers, bytes_per_scalar):
         """[(shard, positions, modelled time)] — the single source both
@@ -227,6 +202,52 @@ class ShardedTransport(Transport):
     def shard_logs(self):
         return list(self._logs)
 
+
+class ShardedTransport(HashShardedWire, Transport):
+    """Vertex ids hashed across S embedding-server shards.
+
+    ``nets`` gives one NetworkModel per shard (heterogeneous bandwidth);
+    a single model (or None) is replicated.  Because every codec is
+    row-independent, splitting rows across shards never changes the
+    reconstructed values — sharding affects only time/bytes accounting,
+    never numerics."""
+
+    def __init__(self, num_layers: int, hidden: int, num_shards: int,
+                 nets: list[NetworkModel] | NetworkModel | None = None):
+        assert num_shards >= 1
+        self.num_layers = num_layers
+        self.hidden = hidden
+        self.num_shards = num_shards
+        if nets is None or isinstance(nets, NetworkModel):
+            nets = [nets or NetworkModel()] * num_shards
+        assert len(nets) == num_shards, "one NetworkModel per shard"
+        self.nets = list(nets)
+        self.shards = [EmbeddingServer(num_layers, hidden, net)
+                       for net in self.nets]
+        self._logs = [TransferLog() for _ in range(num_shards)]
+
+    def register(self, global_ids):
+        for s, pos in self._split(global_ids):
+            self.shards[s].register(np.asarray(global_ids)[pos])
+
+    def write(self, global_ids, layer_values):
+        global_ids = np.asarray(global_ids)
+        for s, pos in self._split(global_ids):
+            self.shards[s].write(global_ids[pos],
+                                 [np.asarray(v)[pos] for v in layer_values])
+
+    def gather(self, global_ids, layers=None):
+        sel = list(range(1, self.num_layers)) if layers is None \
+            else list(layers)
+        global_ids = np.asarray(global_ids)
+        out = [np.zeros((len(global_ids), self.hidden), np.float32)
+               for _ in sel]
+        for s, pos in self._split(global_ids):
+            part = self.shards[s].gather(global_ids[pos], sel)
+            for o, p in zip(out, part):
+                o[pos] = p
+        return out
+
     @property
     def num_embeddings_stored(self):
         return sum(s.num_embeddings_stored for s in self.shards)
@@ -235,14 +256,45 @@ class ShardedTransport(Transport):
         return sum(s.memory_bytes() for s in self.shards)
 
 
-def make_transport(num_layers: int, hidden: int, *, num_shards: int = 1,
-                   nets: list[NetworkModel] | NetworkModel | None = None
-                   ) -> Transport:
-    """Factory the trainer uses: 1 shard → seed topology, else hashed."""
-    if num_shards <= 1:
+def make_transport(num_layers: int, hidden: int, *, kind: str = "auto",
+                   num_shards: int = 1,
+                   nets: list[NetworkModel] | NetworkModel | None = None,
+                   addrs=None, codec: str = "fp32") -> Transport:
+    """Factory the trainer uses.
+
+    ``kind`` selects the wire: ``"inprocess"`` (single modelled link,
+    seed topology), ``"sharded"`` (hashed in-process shards with
+    per-shard modelled links), or ``"tcp"`` (live embedding-server
+    shards at ``addrs``, speaking the repro.exchange.wire protocol with
+    ``codec`` payloads).  The default ``"auto"`` keeps the historical
+    inference: addresses given → tcp, ``num_shards`` > 1 → sharded,
+    else in-process.
+    """
+    if kind == "auto":
+        kind = "tcp" if addrs else \
+            ("sharded" if num_shards > 1 else "inprocess")
+    if kind == "tcp":
+        from .socket_transport import TcpTransport   # lazy: socket machinery
+        if not addrs:
+            raise ValueError("kind='tcp' needs addrs=[(host, port), ...] "
+                             "— one embed_server listener per shard")
+        if num_shards > 1 and len(addrs) != num_shards:
+            raise ValueError(f"num_shards={num_shards} but {len(addrs)} "
+                             "tcp addresses given")
+        return TcpTransport(num_layers, hidden, addrs, codec=codec,
+                            nets=nets)
+    if addrs:
+        raise ValueError(f"addrs only apply to kind='tcp', got {kind!r}")
+    if kind == "inprocess":
+        if num_shards > 1:
+            raise ValueError("kind='inprocess' is single-shard; use "
+                             "kind='sharded' for num_shards > 1")
         if isinstance(nets, list):
             assert len(nets) == 1, \
                 f"{len(nets)} NetworkModels for a single-shard transport"
             nets = nets[0]
         return InProcessTransport(num_layers, hidden, nets)
-    return ShardedTransport(num_layers, hidden, num_shards, nets)
+    if kind == "sharded":
+        return ShardedTransport(num_layers, hidden, num_shards, nets)
+    raise ValueError(f"unknown transport kind {kind!r}; "
+                     "expected inprocess | sharded | tcp")

@@ -1,0 +1,235 @@
+"""Length-prefixed binary wire protocol for the embedding server.
+
+One frame per RPC, in both directions::
+
+    uint32 LE body length | body
+
+Request body: ``uint8 opcode`` + opcode-specific payload.  Response
+body: ``uint8 status`` (0 ok / 1 error) + payload (UTF-8 message on
+error).  All integers little-endian; all arrays C-order raw bytes.
+
+The embedding payload blocks are the *codec wire format itself* — the
+exact bytes :meth:`NetworkModel.embedding_bytes` charges for:
+
+    fp32 — n·hidden·4 B            (raw float32 rows)
+    fp16 — n·hidden·2 B            (raw float16 rows)
+    int8 — n·hidden·1 B + n·4 B    (int8 rows + per-row fp32 scales)
+
+so for every codec ``sum(block bytes) == embedding_bytes(n, hidden,
+layers, bytes_per_scalar=codec.bytes_per_scalar(hidden))`` exactly.
+Frame headers, opcodes and vertex-id vectors are *not* payload — the
+analytic model folds them into ``rpc_overhead_s``, and the transport
+reports them separately as ``frame_bytes``.
+
+Both the client (:class:`repro.exchange.socket_transport.TcpTransport`)
+and the server (``repro.launch.embed_server``) build and parse frames
+through this module, so the two ends cannot drift.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+# -- opcodes / status ---------------------------------------------------------
+
+OP_REGISTER = 1
+OP_WRITE = 2
+OP_GATHER = 3
+OP_STATS = 4
+OP_SHUTDOWN = 5
+
+STATUS_OK = 0
+STATUS_ERR = 1
+
+CODEC_IDS = {"fp32": 0, "fp16": 1, "int8": 2}
+CODEC_NAMES = {v: k for k, v in CODEC_IDS.items()}
+
+_LEN = struct.Struct("<I")
+_U8 = struct.Struct("<B")
+_U16 = struct.Struct("<H")
+_U64 = struct.Struct("<Q")
+_STATS = struct.Struct("<IIQQ")        # num_layers, hidden, rows, mem_bytes
+
+MAX_FRAME = 1 << 30                    # 1 GiB sanity bound per frame
+
+
+# -- codec payload blocks -----------------------------------------------------
+
+def payload_nbytes(codec: str, n: int, hidden: int) -> int:
+    """Wire bytes of one (n, hidden) layer block for ``codec``."""
+    if codec == "fp32":
+        return n * hidden * 4
+    if codec == "fp16":
+        return n * hidden * 2
+    if codec == "int8":
+        return n * hidden + n * 4
+    raise ValueError(f"unknown wire codec {codec!r}")
+
+
+def encode_block(codec: str, payload) -> bytes:
+    """Codec payload (``WireCodec.encode`` output) → wire bytes."""
+    if codec == "fp32":
+        return np.ascontiguousarray(payload, np.float32).tobytes()
+    if codec == "fp16":
+        return np.ascontiguousarray(payload, np.float16).tobytes()
+    if codec == "int8":
+        values, scales = payload
+        return (np.ascontiguousarray(values, np.int8).tobytes()
+                + np.ascontiguousarray(scales, np.float32).tobytes())
+    raise ValueError(f"unknown wire codec {codec!r}")
+
+
+def decode_block(codec: str, buf: memoryview, n: int, hidden: int):
+    """Wire bytes → codec payload (``WireCodec.decode`` input)."""
+    if codec == "fp32":
+        return np.frombuffer(buf, np.float32, n * hidden).reshape(n, hidden)
+    if codec == "fp16":
+        return np.frombuffer(buf, np.float16, n * hidden).reshape(n, hidden)
+    if codec == "int8":
+        values = np.frombuffer(buf, np.int8, n * hidden).reshape(n, hidden)
+        scales = np.frombuffer(buf[n * hidden:], np.float32, n).reshape(n, 1)
+        return values, scales
+    raise ValueError(f"unknown wire codec {codec!r}")
+
+
+# -- framing ------------------------------------------------------------------
+
+def recv_exact(sock, n: int) -> bytes:
+    """Read exactly n bytes; raises ConnectionError on EOF mid-message."""
+    chunks, got = [], 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            raise ConnectionError(
+                f"peer closed mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def send_frame(sock, body: bytes) -> None:
+    sock.sendall(_LEN.pack(len(body)) + body)
+
+
+def recv_frame(sock) -> bytes | None:
+    """One framed body, or None on a clean EOF at a frame boundary."""
+    hdr = b""
+    while len(hdr) < _LEN.size:
+        chunk = sock.recv(_LEN.size - len(hdr))
+        if not chunk:
+            if hdr:
+                raise ConnectionError("peer closed mid-header")
+            return None
+        hdr += chunk
+    (length,) = _LEN.unpack(hdr)
+    if length > MAX_FRAME:
+        raise ConnectionError(f"frame of {length} bytes exceeds MAX_FRAME")
+    return recv_exact(sock, length)
+
+
+def frame_nbytes(body_len: int) -> int:
+    return _LEN.size + body_len
+
+
+# -- request builders ---------------------------------------------------------
+
+def _gid_bytes(global_ids: np.ndarray) -> bytes:
+    return np.ascontiguousarray(global_ids, np.int64).tobytes()
+
+
+def build_register(global_ids: np.ndarray) -> bytes:
+    return (_U8.pack(OP_REGISTER) + _U64.pack(len(global_ids))
+            + _gid_bytes(global_ids))
+
+
+def build_write(codec: str, global_ids: np.ndarray,
+                blocks: list[bytes]) -> bytes:
+    head = (_U8.pack(OP_WRITE) + _U8.pack(CODEC_IDS[codec])
+            + _U16.pack(len(blocks)) + _U64.pack(len(global_ids))
+            + _gid_bytes(global_ids))
+    return head + b"".join(blocks)
+
+
+def build_gather(codec: str, global_ids: np.ndarray,
+                 layers: list[int]) -> bytes:
+    return (_U8.pack(OP_GATHER) + _U8.pack(CODEC_IDS[codec])
+            + _U16.pack(len(layers))
+            + b"".join(_U16.pack(l) for l in layers)
+            + _U64.pack(len(global_ids)) + _gid_bytes(global_ids))
+
+
+def build_stats() -> bytes:
+    return _U8.pack(OP_STATS)
+
+
+def build_shutdown() -> bytes:
+    return _U8.pack(OP_SHUTDOWN)
+
+
+# -- request parsing (server side) --------------------------------------------
+
+def parse_request(body: bytes) -> tuple[int, dict]:
+    """→ (opcode, fields).  Payload blocks stay as a memoryview tail so
+    the server can decode them against its own (num_layers, hidden)."""
+    view = memoryview(body)
+    (op,) = _U8.unpack_from(view, 0)
+    if op == OP_REGISTER:
+        (n,) = _U64.unpack_from(view, 1)
+        gids = np.frombuffer(view, np.int64, n, offset=1 + _U64.size)
+        return op, {"global_ids": gids}
+    if op == OP_WRITE:
+        (codec_id,) = _U8.unpack_from(view, 1)
+        (layers,) = _U16.unpack_from(view, 2)
+        (n,) = _U64.unpack_from(view, 4)
+        off = 4 + _U64.size
+        gids = np.frombuffer(view, np.int64, n, offset=off)
+        off += n * 8
+        return op, {"codec": CODEC_NAMES[codec_id], "num_blocks": layers,
+                    "global_ids": gids, "payload": view[off:]}
+    if op == OP_GATHER:
+        (codec_id,) = _U8.unpack_from(view, 1)
+        (nsel,) = _U16.unpack_from(view, 2)
+        off = 4
+        layers = [_U16.unpack_from(view, off + 2 * i)[0]
+                  for i in range(nsel)]
+        off += 2 * nsel
+        (n,) = _U64.unpack_from(view, off)
+        off += _U64.size
+        gids = np.frombuffer(view, np.int64, n, offset=off)
+        return op, {"codec": CODEC_NAMES[codec_id], "layers": layers,
+                    "global_ids": gids}
+    if op in (OP_STATS, OP_SHUTDOWN):
+        return op, {}
+    raise ValueError(f"unknown opcode {op}")
+
+
+# -- responses ----------------------------------------------------------------
+
+def build_ok(payload: bytes = b"") -> bytes:
+    return _U8.pack(STATUS_OK) + payload
+
+
+def build_err(message: str) -> bytes:
+    return _U8.pack(STATUS_ERR) + message.encode("utf-8", "replace")
+
+
+def build_stats_payload(num_layers: int, hidden: int, rows: int,
+                        memory_bytes: int) -> bytes:
+    return _STATS.pack(num_layers, hidden, rows, memory_bytes)
+
+
+def parse_stats_payload(payload: bytes) -> dict:
+    num_layers, hidden, rows, mem = _STATS.unpack(payload)
+    return {"num_layers": num_layers, "hidden": hidden,
+            "rows": rows, "memory_bytes": mem}
+
+
+def parse_response(body: bytes) -> memoryview:
+    """→ response payload; raises RuntimeError on an error status."""
+    view = memoryview(body)
+    (status,) = _U8.unpack_from(view, 0)
+    if status == STATUS_OK:
+        return view[1:]
+    raise RuntimeError(bytes(view[1:]).decode("utf-8", "replace"))

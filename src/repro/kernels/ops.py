@@ -46,11 +46,35 @@ def swa_attention_decode(q, k, v, kv_pos, kv_valid, q_pos, *, window,
                                     window)
 
 
+def _np_quantize_int8(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Numpy mirror of ref.quantize_int8, op-for-op (same fp32 ops in
+    the same order, round-half-even), so results stay bit-identical."""
+    x = np.asarray(x, np.float32)
+    absmax = np.max(np.abs(x), axis=1, keepdims=True) \
+        if x.size else np.zeros((x.shape[0], 1), np.float32)
+    scale = (absmax * np.float32(1.0 / 127.0)).astype(np.float32)
+    safe = np.where(scale > 0, scale, np.float32(1.0)).astype(np.float32)
+    q = np.clip(np.rint(x / safe), -127.0, 127.0).astype(np.int8)
+    return q, scale
+
+
+def _np_dequantize_int8(values: np.ndarray,
+                        scales: np.ndarray) -> np.ndarray:
+    return values.astype(np.float32) * scales.astype(np.float32)
+
+
 def quantize_int8(x, *, use_pallas="auto"):
-    """Per-row symmetric int8 quantize → (values int8, scales fp32 (n,1))."""
+    """Per-row symmetric int8 quantize → (values int8, scales fp32 (n,1)).
+
+    Host arrays off-TPU take a pure-numpy fast path: the exchange codec
+    calls this per push/pull with delta-sized (varying-shape) batches,
+    where eager jnp pays ~ms dispatch per call and jit would retrace
+    per shape (see ROADMAP: device-resident codec path)."""
     use, interp = _resolve(use_pallas)
     if use:
         return _quant.quantize_int8(x, interpret=interp)
+    if isinstance(x, np.ndarray):
+        return _np_quantize_int8(x)
     return ref.quantize_int8(x)
 
 
@@ -58,6 +82,8 @@ def dequantize_int8(values, scales, *, use_pallas="auto"):
     use, interp = _resolve(use_pallas)
     if use:
         return _quant.dequantize_int8(values, scales, interpret=interp)
+    if isinstance(values, np.ndarray):
+        return _np_dequantize_int8(values, np.asarray(scales))
     return ref.dequantize_int8(values, scales)
 
 

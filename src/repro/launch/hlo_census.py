@@ -111,15 +111,74 @@ def parse_computations(hlo: str) -> dict[str, Computation]:
 
 
 def _called(instr: Instr) -> list[tuple[str, str]]:
-    """(kind, computation) pairs invoked by this instruction."""
+    """(kind, computation) pairs invoked by this instruction.
+
+    The attribute value is either a single ``%name`` or a braced list
+    ``{%a, %b}``; stopping at the brace/name boundary keeps the *next*
+    attribute (``metadata=...`` etc.) from leaking into the names."""
     out = []
     for attr in ("condition", "body", "calls", "to_apply",
                  "branch_computations"):
-        m = re.search(attr + r"=\{?%?([\w\.\-, %]+)\}?", instr.text)
+        m = re.search(attr + r"=(?:\{([^}]*)\}|%?([\w\.\-]+))", instr.text)
         if m:
-            for name in m.group(1).split(","):
+            names = m.group(1) if m.group(1) is not None else m.group(2)
+            for name in names.split(","):
                 out.append((attr, name.strip().lstrip("%")))
     return out
+
+
+def _operands(instr: Instr) -> list[str]:
+    """Top-level operand tokens of ``op(...)`` — commas inside brackets
+    (inline shapes like ``f32[8,16]{1,0}``) and nested parens (tuple
+    types) do not split."""
+    rest = instr.text.split(instr.op + "(", 1)
+    if len(rest) != 2:
+        return []
+    s = rest[1]
+    out, tok, depth = [], [], 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in "}]":
+            depth -= 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append("".join(tok).strip())
+            tok = []
+            continue
+        tok.append(ch)
+    if tok and "".join(tok).strip():
+        out.append("".join(tok).strip())
+    return out
+
+
+_INLINE_TYPE = re.compile(r"(\w+\[[\d,]*\](?:\{[\d,]*\})?)")
+
+
+def _operand_type(tok: str, types: dict[str, str]) -> str | None:
+    """Resolve one operand token to its type string: inline type when the
+    dump carries one, else the symbol table."""
+    m = _INLINE_TYPE.search(tok)
+    if m:
+        return m.group(1)
+    m = re.search(r"%?([\w\.\-]+)\s*$", tok)
+    if m and m.group(1) in types:
+        return types[m.group(1)]
+    return None
+
+
+_KNOWN_TRIPS = re.compile(r'known_trip_count[":{\s]+n["\s:]+(\d+)')
+
+
+def _instr_trip_count(instr: Instr) -> int | None:
+    """Trip count XLA stamped on the while itself
+    (``backend_config={"known_trip_count":{"n":"5"}}``) — authoritative
+    when present."""
+    m = _KNOWN_TRIPS.search(instr.text)
+    return int(m.group(1)) if m else None
 
 
 def _trip_count(cond: Computation) -> int:
@@ -153,20 +212,13 @@ def _dot_flops(instr: Instr, types: dict[str, str]) -> float:
     for d in rdims:
         result_elems *= d
     lhs_dims: list[int] = []
-    rest = instr.text.split(instr.op + "(", 1)
-    if len(rest) == 2:
-        first = rest[1].split(",")[0].strip().rstrip(")")
-        m = re.match(r"%?([\w\.\-]+)", first)
-        if m and m.group(1) in types:
-            sh = _shape_dims(types[m.group(1)])
+    ops = _operands(instr)
+    if ops:
+        lhs_type = _operand_type(ops[0], types)
+        if lhs_type:
+            sh = _shape_dims(lhs_type)
             if sh:
                 lhs_dims = sh[0][1]
-        else:
-            m2 = re.search(r"(\w+\[[\d,]*\])", first)
-            if m2:
-                sh = _shape_dims(m2.group(1))
-                if sh:
-                    lhs_dims = sh[0][1]
     mdim = re.search(r"lhs_contracting_dims=\{([\d,]+)\}", instr.text)
     contraction = 1
     if mdim and lhs_dims:
@@ -178,13 +230,13 @@ def _dot_flops(instr: Instr, types: dict[str, str]) -> float:
 
 
 def _operand_bytes(instr: Instr, types: dict[str, str]) -> int:
-    """Total bytes of the instruction's operands (symbol-table resolved)."""
-    rest = instr.text.split(instr.op + "(", 1)
-    if len(rest) != 2:
-        return 0
-    args = rest[1].split(")")[0]
+    """Total bytes of the instruction's operands (inline types when the
+    dump carries them, symbol-table resolved otherwise)."""
     total = 0
-    for tok in args.split(","):
+    for tok in _operands(instr):
+        if _INLINE_TYPE.search(tok):
+            total += _type_bytes(tok)
+            continue
         m = re.match(r"\s*%?([\w\.\-]+)", tok)
         if m and m.group(1) in types:
             total += _type_bytes(types[m.group(1)])
@@ -209,7 +261,9 @@ def census(hlo: str) -> dict:
             if ins.op == "while":
                 body = next((n for k, n in calls if k == "body"), None)
                 cond = next((n for k, n in calls if k == "condition"), None)
-                trips = _trip_count(comps[cond]) if cond in comps else 1
+                trips = _instr_trip_count(ins)
+                if trips is None:
+                    trips = _trip_count(comps[cond]) if cond in comps else 1
                 if cond in comps:
                     visit(comps[cond], m * (trips + 1))
                 if body in comps:
@@ -268,3 +322,13 @@ def census(hlo: str) -> dict:
     return {"flops": flops, "hbm_bytes": hbm,
             "collective_bytes": coll,
             "collective_total": sum(coll.values())}
+
+
+def compiled_flops(compiled) -> float:
+    """``cost_analysis()['flops']`` across jax versions: 0.4.x returns a
+    list of per-program dicts, >=0.5 a single dict; either may omit the
+    key for trivial programs."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return float(ca.get("flops", 0.0))

@@ -1,0 +1,331 @@
+"""Live TCP exchange: wire protocol, TcpTransport parity, calibration
+fit, and the trainer compositions the unit tests never exercised
+(codec × delta × shards through run_round; TCP end-to-end)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (EmbeddingServer, FederatedGNNTrainer, NetworkModel,
+                        default_strategies)
+from repro.core.cost_model import fit_network_model
+from repro.exchange import (ExchangeClient, InProcessTransport, TcpTransport,
+                            available_codecs, get_codec, make_transport,
+                            parse_address, wire)
+from repro.graphs import make_graph
+from repro.launch.embed_server import serve_in_thread
+
+
+@pytest.fixture
+def two_shards():
+    handles = [serve_in_thread(3, 16), serve_in_thread(3, 16)]
+    yield handles
+    for h in handles:
+        h.stop()
+
+
+# -- wire protocol ------------------------------------------------------------
+
+def test_wire_request_roundtrip():
+    gids = np.array([3, 11, 42], np.int64)
+    op, req = wire.parse_request(wire.build_register(gids))
+    assert op == wire.OP_REGISTER
+    np.testing.assert_array_equal(req["global_ids"], gids)
+
+    blocks = [wire.encode_block("fp32", np.ones((3, 4), np.float32))] * 2
+    op, req = wire.parse_request(wire.build_write("fp32", gids, blocks))
+    assert op == wire.OP_WRITE
+    assert req["codec"] == "fp32" and req["num_blocks"] == 2
+    np.testing.assert_array_equal(req["global_ids"], gids)
+    got = wire.decode_block("fp32", req["payload"][:3 * 4 * 4], 3, 4)
+    np.testing.assert_array_equal(got, 1.0)
+
+    op, req = wire.parse_request(wire.build_gather("int8", gids, [1, 2]))
+    assert op == wire.OP_GATHER
+    assert req["codec"] == "int8" and req["layers"] == [1, 2]
+    np.testing.assert_array_equal(req["global_ids"], gids)
+
+
+@pytest.mark.parametrize("codec", ["fp32", "fp16", "int8"])
+def test_wire_block_bytes_match_network_model(codec):
+    """Every codec's wire block is byte-for-byte what the analytic model
+    charges: payload_nbytes == embedding_bytes per layer."""
+    net = NetworkModel()
+    cdc = get_codec(codec)
+    for n, hidden in [(1, 8), (57, 32), (300, 128)]:
+        x = np.random.default_rng(n).standard_normal(
+            (n, hidden)).astype(np.float32)
+        blob = wire.encode_block(codec, cdc.encode(x))
+        assert len(blob) == wire.payload_nbytes(codec, n, hidden)
+        assert len(blob) == net.embedding_bytes(
+            n, hidden, 1, bytes_per_scalar=cdc.bytes_per_scalar(hidden))
+        back = cdc.decode(wire.decode_block(codec, memoryview(blob),
+                                            n, hidden))
+        np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                      cdc.roundtrip(x))
+
+
+def test_parse_address_forms():
+    assert parse_address(("10.0.0.1", 7040)) == ("10.0.0.1", 7040)
+    assert parse_address("10.0.0.1:7040") == ("10.0.0.1", 7040)
+    assert parse_address(":7040") == ("127.0.0.1", 7040)
+
+
+# -- TcpTransport vs InProcessTransport ---------------------------------------
+
+@pytest.mark.parametrize("codec", sorted(available_codecs()))
+def test_tcp_client_parity_every_codec(two_shards, codec):
+    """Acceptance: a full ExchangeClient pipeline (push → peek) over a
+    live 2-shard TCP wire is bit-identical to the in-process transport
+    for every codec, across delta-filtered rounds."""
+    tcp = TcpTransport(3, 16, [h.address for h in two_shards], codec=codec)
+    inp = InProcessTransport(3, 16)
+    ex_t = ExchangeClient(tcp, codec, delta_threshold=0.05)
+    ex_i = ExchangeClient(inp, codec, delta_threshold=0.05)
+    gids = np.random.default_rng(0).permutation(500)[:123]
+    rng = np.random.default_rng(1)
+    for _ in range(2):
+        vals = [rng.standard_normal((123, 16)).astype(np.float32)
+                for _ in range(2)]
+        for ex in (ex_t, ex_i):
+            ex.register(gids)
+            ex.push(gids, vals)
+        for a, b in zip(ex_t.peek(gids), ex_i.peek(gids)):
+            np.testing.assert_array_equal(a, b)
+    tcp.close()
+
+
+def test_tcp_raw_write_gather_lossless_codecs(two_shards):
+    """fp32/fp16 cross the wire losslessly once values are
+    codec-representable: raw transport gather == in-process gather."""
+    for codec in ("fp32", "fp16"):
+        tcp = TcpTransport(3, 16, [h.address for h in two_shards],
+                           codec=codec)
+        inp = InProcessTransport(3, 16)
+        gids = np.arange(100, 180)
+        vals = [get_codec(codec).roundtrip(
+            np.random.default_rng(l).standard_normal(
+                (80, 16)).astype(np.float32)) for l in range(2)]
+        for t in (tcp, inp):
+            t.register(gids)
+            t.write(gids, vals)
+        for a, b in zip(tcp.gather(gids), inp.gather(gids)):
+            np.testing.assert_array_equal(a, b)
+        tcp.close()
+
+
+@pytest.mark.parametrize("codec", ["fp32", "int8"])
+def test_tcp_wire_bytes_equal_embedding_bytes(two_shards, codec):
+    """Acceptance: measured on-wire payload bytes == the analytic
+    NetworkModel.embedding_bytes, exactly, for fp32 and int8."""
+    tcp = TcpTransport(3, 16, [h.address for h in two_shards], codec=codec)
+    gids = np.arange(257)
+    vals = [np.random.default_rng(l).standard_normal(
+        (257, 16)).astype(np.float32) for l in range(2)]
+    tcp.register(gids)
+    tcp.write(gids, vals)
+    tcp.gather(gids)
+    bps = get_codec(codec).bytes_per_scalar(16)
+    expect = NetworkModel().embedding_bytes(257, 16, 2,
+                                            bytes_per_scalar=bps)
+    wl = tcp.wire_log
+    assert wl.bytes == 2 * expect          # one write + one gather
+    # per-RPC: each shard's sample is exactly its row share
+    for s in tcp.rpc_samples:
+        if s.op in ("write", "gather"):
+            assert s.payload_bytes == NetworkModel().embedding_bytes(
+                s.n_rows, 16, s.layers, bytes_per_scalar=bps)
+    assert wl.measured_seconds > 0 and wl.seconds > 0
+    tcp.close()
+
+
+def test_tcp_unregistered_gid_error_names_gids(two_shards):
+    tcp = TcpTransport(3, 16, [h.address for h in two_shards])
+    tcp.register(np.arange(10))
+    with pytest.raises(RuntimeError, match="9999"):
+        tcp.gather(np.array([2, 9999]))
+    tcp.close()
+
+
+def test_embedding_server_rows_error_is_actionable():
+    srv = EmbeddingServer(3, 8)
+    srv.register(np.arange(5))
+    with pytest.raises(KeyError) as ei:
+        srv.gather(np.array([1, 77, 88]))
+    msg = str(ei.value)
+    assert "77" in msg and "88" in msg and "5 registered" in msg
+
+
+def test_tcp_reconnect_after_connection_drop(two_shards):
+    """Dead pooled connections are dropped and the whole idempotent
+    fan-out retried once — covering both send-time failures and
+    recv-time failures (a send into a dead socket can still succeed
+    into the kernel buffer)."""
+    tcp = TcpTransport(3, 16, [h.address for h in two_shards])
+    gids = np.arange(40)
+    tcp.register(gids)
+    for s in range(tcp.num_shards):          # kill the pooled sockets
+        tcp._socks[s].close()
+    vals = [np.ones((40, 16), np.float32) for _ in range(2)]
+    tcp.write(gids, vals)
+    np.testing.assert_array_equal(tcp.gather(gids)[0], 1.0)
+    # recv-side failure: socket half-closed for reading only, so the
+    # next send succeeds but the response read hits EOF
+    for s in range(tcp.num_shards):
+        tcp._socks[s].shutdown(__import__("socket").SHUT_RD)
+    tcp.write(gids, [np.full((40, 16), 3.0, np.float32)] * 2)
+    np.testing.assert_array_equal(tcp.gather(gids)[0], 3.0)
+    tcp.close()
+
+
+def test_tcp_mismatched_server_shape_fails_fast(two_shards):
+    with pytest.raises(ValueError, match="hidden"):
+        TcpTransport(3, 64, [h.address for h in two_shards])
+    with pytest.raises(ValueError, match="--num-layers"):
+        TcpTransport(5, 16, [h.address for h in two_shards])
+
+
+# -- make_transport kind switch ----------------------------------------------
+
+def test_make_transport_kind_switch(two_shards):
+    from repro.exchange import ShardedTransport
+    assert isinstance(make_transport(3, 8, kind="inprocess"),
+                      InProcessTransport)
+    assert isinstance(make_transport(3, 8, kind="sharded", num_shards=4),
+                      ShardedTransport)
+    t = make_transport(3, 16, kind="tcp",
+                       addrs=[h.address for h in two_shards])
+    assert isinstance(t, TcpTransport) and t.num_shards == 2
+    t.close()
+    # auto keeps the historical inference
+    assert isinstance(make_transport(3, 8), InProcessTransport)
+    assert isinstance(make_transport(3, 8, num_shards=2), ShardedTransport)
+    with pytest.raises(ValueError):
+        make_transport(3, 8, kind="tcp")                 # no addrs
+    with pytest.raises(ValueError):
+        make_transport(3, 8, kind="inprocess", num_shards=2)
+    with pytest.raises(ValueError):
+        make_transport(3, 8, kind="redis")
+    with pytest.raises(ValueError):
+        make_transport(3, 8, kind="sharded", addrs=[("h", 1)])
+
+
+def test_client_codec_must_match_real_wire_codec(two_shards):
+    tcp = TcpTransport(3, 16, [h.address for h in two_shards], codec="int8")
+    with pytest.raises(ValueError, match="codec"):
+        ExchangeClient(tcp, "fp32")
+    tcp.close()
+
+
+# -- calibration fit ----------------------------------------------------------
+
+def test_fit_network_model_recovers_params():
+    true = NetworkModel(bandwidth_bytes_per_s=1e8, rpc_overhead_s=2e-3,
+                        per_embedding_overhead_s=5e-6)
+    rng = np.random.default_rng(0)
+    samples = []
+    for n in (32, 128, 512, 2048):
+        for hidden in (16, 64):
+            b = n * hidden * 2 * 4
+            e = n * 2
+            t = b / true.bandwidth_bytes_per_s + true.rpc_overhead_s \
+                + e * true.per_embedding_overhead_s
+            samples.append((b, 1, e, t * (1 + 1e-3 * rng.standard_normal())))
+    fit = fit_network_model(samples, relative=True)
+    assert fit.bandwidth_bytes_per_s == pytest.approx(1e8, rel=0.1)
+    assert fit.rpc_overhead_s == pytest.approx(2e-3, rel=0.1)
+    assert fit.per_embedding_overhead_s == pytest.approx(5e-6, rel=0.1)
+
+
+def test_fit_network_model_nonnegative_and_minimum_samples():
+    with pytest.raises(ValueError):
+        fit_network_model([(1.0, 1, 1, 0.1)])
+    # pathological anti-correlated bytes: coefficient clamps to zero
+    samples = [(1e6, 1, 10, 0.001), (2e6, 1, 20, 0.0009),
+               (4e6, 1, 40, 0.0008), (8e6, 1, 80, 0.0007)]
+    fit = fit_network_model(samples)
+    assert fit.rpc_overhead_s >= 0 and fit.per_embedding_overhead_s >= 0
+
+
+def test_quantize_numpy_path_matches_jnp_oracle():
+    """The host-array fast path the codec hits must stay bit-identical
+    to the jnp oracle (and hence to the Pallas kernel)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(7)
+    for n, h in [(1, 1), (63, 32), (300, 129), (0, 16)]:
+        x = (rng.standard_normal((n, h)) * 3).astype(np.float32)
+        qn, sn = ops.quantize_int8(x)                   # numpy path
+        qj, sj = ref.quantize_int8(jnp.asarray(x))      # jnp oracle
+        np.testing.assert_array_equal(qn, np.asarray(qj))
+        np.testing.assert_array_equal(sn, np.asarray(sj))
+        np.testing.assert_array_equal(
+            ops.dequantize_int8(qn, sn), np.asarray(
+                ref.dequantize_int8(qj, sj)))
+
+
+# -- trainer compositions -----------------------------------------------------
+
+def test_trainer_opp_int8_delta_sharded_e2e():
+    """Composition coverage: OPP (overlap + pruning + prefetch) with
+    codec=int8, τ=0.05 delta pushes and 2 server shards, end-to-end
+    through run_round — previously only unit-tested in isolation.
+    Sharding must not change numerics even composed with everything."""
+    g = make_graph("reddit", scale=0.05, seed=3)
+    base = default_strategies()["OPP"]
+    accs = []
+    for shards in (1, 2):
+        strat = dataclasses.replace(base, codec="int8",
+                                    delta_threshold=0.05,
+                                    num_server_shards=shards)
+        tr = FederatedGNNTrainer(g, 2, strat, batch_size=64, seed=0)
+        stats = tr.train(2)
+        accs.append([s.accuracy for s in stats])
+        assert all(np.isfinite(s.accuracy) for s in stats)
+        assert all(np.isfinite(s.train_loss) for s in stats)
+        assert stats[-1].embeddings_stored > 0
+        assert tr.server.log.rpcs > 0 and tr.server.log.bytes > 0
+        trackers = [ex.delta for ex in tr.ex_clients if ex is not None]
+        assert all(t is not None for t in trackers)
+        assert sum(t.total_rows for t in trackers) > 0
+    assert accs[0] == accs[1]
+
+
+def test_trainer_tcp_smoke_bit_identical():
+    """Acceptance: a 2-client, 2-shard trainer over live loopback TCP
+    reaches accuracy bit-identical to the in-process transports with
+    the same seed and codec."""
+    g = make_graph("reddit", scale=0.05, seed=3)
+    base = default_strategies()["E"]
+    st_ref = dataclasses.replace(base, num_server_shards=2, codec="int8")
+    tr_ref = FederatedGNNTrainer(g, 2, st_ref, batch_size=64, seed=0)
+    accs_ref = [s.accuracy for s in tr_ref.train(2)]
+
+    handles = [serve_in_thread(3, 32), serve_in_thread(3, 32)]
+    try:
+        st_tcp = dataclasses.replace(base, num_server_shards=2,
+                                     codec="int8", transport="tcp")
+        tr_tcp = FederatedGNNTrainer(
+            g, 2, st_tcp, batch_size=64, seed=0,
+            transport_addrs=[h.address for h in handles])
+        accs_tcp = [s.accuracy for s in tr_tcp.train(2)]
+        assert accs_ref == accs_tcp
+        wl = tr_tcp.exchange.wire_log
+        assert wl.rpcs > 0 and wl.bytes > 0 and wl.measured_seconds > 0
+        tr_tcp.exchange.close()
+    finally:
+        for h in handles:
+            h.stop()
+
+
+def test_trainer_push_rows_cached_consistent():
+    """The hoisted push-row indices must equal a fresh g2l lookup."""
+    g = make_graph("reddit", scale=0.05, seed=3)
+    tr = FederatedGNNTrainer(g, 3, default_strategies()["E"],
+                             batch_size=64, seed=0)
+    for ci, sh in enumerate(tr.shards):
+        g2l = {int(v): i
+               for i, v in enumerate(sh.global_ids[:sh.num_local])}
+        expect = np.array([g2l[int(v)] for v in sh.push_nodes], np.int64)
+        np.testing.assert_array_equal(tr.push_rows[ci], expect)
