@@ -1,0 +1,115 @@
+"""Control-plane benchmark: sync vs async aggregation under stragglers.
+
+The experiment the sequential simulator cannot express (OptimES §4.2
+models overlap *within* a client; this measures overlap *across*
+clients): a real coordinator + worker deployment over loopback TCP —
+live embed shards, live weight exchange — with one worker paced as a
+``STRAGGLE``× straggler.  Synchronous FedAvg pays the straggler every
+round (the barrier waits); FedBuff-style async aggregation
+(Strategy.buffer_size / staleness_decay) lets the fast worker keep
+contributing updates, so wall-clock time-to-accuracy should drop.
+
+Both ledgers are reported per mode, same discipline as TcpTransport:
+``measured`` is real wall clock from first registration (includes the
+injected sleeps), ``modelled`` is the NetworkModel-based round time the
+workers report (pacing-scaled ``client_total`` + modelled model
+exchange).
+
+CSV rows: ``name,us_per_call,derived`` where us_per_call is the median
+measured aggregation-to-aggregation time and ``derived`` carries
+time-to-accuracy at the shared target plus final/peak accuracy.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.fedsvc.coordinator import CoordinatorState, serve_in_thread
+from repro.fedsvc.runtime import EvalHarness, RunConfig
+from repro.fedsvc.worker import FedWorker, WorkerScenario, run_in_thread
+from repro.launch.embed_server import serve_in_thread as embed_serve
+
+from .common import emit, quick_mode
+
+STRAGGLE = 2.5          # the slow worker's pacing multiplier (>= 2x)
+
+
+def run_mode(mode: str, *, rounds: int, cfg_kw: dict,
+             buffer_size: int = 2, staleness_decay: float = 0.5) -> dict:
+    shards = [embed_serve(cfg_kw["num_layers"], cfg_kw["hidden"])
+              for _ in range(2)]
+    overrides = {"aggregation": mode, "buffer_size": buffer_size,
+                 "staleness_decay": staleness_decay}
+    cfg = RunConfig(strategy="E", num_clients=2, rounds=rounds,
+                    overrides=overrides,
+                    embed_addrs=[f"{h.host}:{h.port}" for h in shards],
+                    **cfg_kw)
+    harness = EvalHarness(cfg)
+    state = CoordinatorState(
+        num_clients=2, num_rounds=rounds, mode=mode,
+        buffer_size=buffer_size, staleness_decay=staleness_decay,
+        init_leaves=harness.init_leaves(),
+        eval_fn=harness.evaluate_leaves)
+    coord = serve_in_thread(state)
+    workers = [
+        FedWorker(cfg, [0], coord.address, worker_id="fast"),
+        FedWorker(cfg, [1], coord.address, worker_id="slow",
+                  scenario=WorkerScenario(pacing=STRAGGLE, seed=1)),
+    ]
+    threads = [run_in_thread(w) for w in workers]
+    finished = coord.join(timeout=1200)
+    for t in threads:
+        t.join(timeout=60)
+    with state.cond:
+        history = list(state.history)
+    coord.stop()
+    for h in shards:
+        h.stop()
+    if not finished or not history:
+        raise RuntimeError(f"{mode} run did not finish "
+                           f"({len(history)} aggregations)")
+    return {"history": history,
+            "accs": [h["accuracy"] for h in history],
+            "wall": [h["wall_s"] for h in history],
+            "modelled": [h["cum_modelled_s"] for h in history]}
+
+
+def tta(res: dict, target: float, key: str) -> float:
+    for acc, t in zip(res["accs"], res[key]):
+        if acc >= target:
+            return t
+    return float("nan")
+
+
+def main() -> None:
+    rounds = 6 if quick_mode() else 12
+    cfg_kw = dict(graph="reddit", scale=0.05, graph_seed=3,
+                  num_layers=3, hidden=32, batch_size=64,
+                  epochs_per_round=3, seed=0)
+    # async gets the same *update budget*: `rounds` sync rounds consume
+    # 2*rounds client updates = rounds buffer drains at buffer_size=2.
+    sync = run_mode("sync", rounds=rounds, cfg_kw=cfg_kw)
+    asyn = run_mode("async", rounds=rounds, cfg_kw=cfg_kw)
+
+    # shared target: reachable by both modes (async pays staleness a
+    # bit of accuracy; the win it buys is wall clock)
+    target = 0.9 * min(max(sync["accs"]), max(asyn["accs"]))
+    for name, res in (("sync", sync), ("async", asyn)):
+        gaps = np.diff([0.0] + res["wall"])
+        emit(f"{name}-straggler{STRAGGLE:g}x",
+             {"median_round_s": float(np.median(gaps))},
+             f"tta_measured_s={tta(res, target, 'wall'):.2f} "
+             f"tta_modelled_s={tta(res, target, 'modelled'):.2f} "
+             f"wall_s={res['wall'][-1]:.2f} "
+             f"modelled_s={res['modelled'][-1]:.2f} "
+             f"peak={max(res['accs']):.4f} "
+             f"final={res['accs'][-1]:.4f} target={target:.4f}")
+    speedup = tta(sync, target, "wall") / tta(asyn, target, "wall")
+    print(f"# async speedup at target: {speedup:.2f}x "
+          f"(straggler {STRAGGLE:g}x, buffer_size=2)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

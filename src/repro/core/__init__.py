@@ -8,15 +8,16 @@ distributed, launch) are sibling subpackages.
 
 from .cost_model import NetworkModel, TransferLog
 from .embedding_server import EmbeddingServer
-from .federated import (FederatedGNNTrainer, PhaseTimes, RoundStats,
-                        peak_accuracy, time_to_accuracy)
+from .federated import (ClientRoundResult, FederatedGNNTrainer, PhaseTimes,
+                        RoundStats, peak_accuracy, time_to_accuracy)
 from .pruning import (bridge_scores, degree_scores, frequency_scores,
                       retention_pruned_sets, score_remote_nodes, top_fraction)
 from .strategies import Strategy, default_strategies
 
 __all__ = [
     "NetworkModel", "TransferLog", "EmbeddingServer", "FederatedGNNTrainer",
-    "PhaseTimes", "RoundStats", "peak_accuracy", "time_to_accuracy",
+    "ClientRoundResult", "PhaseTimes", "RoundStats", "peak_accuracy",
+    "time_to_accuracy",
     "retention_pruned_sets", "frequency_scores", "degree_scores",
     "bridge_scores", "score_remote_nodes", "top_fraction", "Strategy",
     "default_strategies",

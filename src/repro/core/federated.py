@@ -37,6 +37,7 @@ import numpy as np
 if TYPE_CHECKING:  # break the repro.exchange → repro.core import cycle
     from repro.exchange import ExchangeClient, PushPlan
 
+from repro.fedsvc.aggregation import fedavg_leaves
 from repro.graphs.graph import Graph
 from repro.graphs.partition import (ClientShard, bfs_partition,
                                     make_client_shards)
@@ -68,6 +69,21 @@ class PhaseTimes:
             head = train - last_epoch
             return self.pull + head + max(last_epoch * interference, push)
         return self.pull + train + push
+
+
+@dataclasses.dataclass
+class ClientRoundResult:
+    """One client's share of a federated round — the unit of work the
+    in-process simulator and the fedsvc worker process both execute
+    (via :meth:`FederatedGNNTrainer.client_round`)."""
+    client_id: int
+    params: object                           # locally trained pytree
+    phases: PhaseTimes
+    rpc_sizes: list[int]                     # dynamic-pull RPC sizes
+    push_plan: Optional["PushPlan"]          # priced, not yet applied
+    weight: float                            # FedAvg weight (train verts)
+    loss: float
+    client_time: float                       # modelled §4.2 wall time
 
 
 @dataclasses.dataclass
@@ -211,7 +227,8 @@ class FederatedGNNTrainer:
                 addrs=self.transport_addrs, codec=st.codec)
             self.ex_clients: list[ExchangeClient | None] = [
                 ExchangeClient(self.exchange, st.codec,
-                               delta_threshold=st.delta_threshold)
+                               delta_threshold=st.delta_threshold,
+                               error_feedback=st.error_feedback)
                 for _ in shards
             ]
             for sh in shards:
@@ -262,6 +279,34 @@ class FederatedGNNTrainer:
              for _ in range(self.L - 1)]
             for sh in shards
         ]
+        self._treedef = jax.tree_util.tree_structure(self.params)
+        self.acc_history: list[float] = []   # finished-round accuracies
+
+    # -- params <-> leaves (fedsvc control plane) ------------------------------
+
+    def params_leaves(self, params=None) -> list[np.ndarray]:
+        """Flat numpy leaves of ``params`` (default: the global model),
+        in canonical tree_flatten order — the coordinator wire format."""
+        return [np.asarray(l) for l in
+                jax.tree_util.tree_leaves(
+                    self.params if params is None else params)]
+
+    def leaves_to_params(self, leaves):
+        """Inverse of :meth:`params_leaves`."""
+        return jax.tree_util.tree_unflatten(
+            self._treedef, [jnp.asarray(l) for l in leaves])
+
+    def set_round_tau(self, round_idx: int, accuracies=None) -> None:
+        """Apply the adaptive-τ schedule (Strategy.delta_schedule) for
+        this round to every client's delta tracker."""
+        tau = self.strategy.delta_for_round(
+            round_idx,
+            self.acc_history if accuracies is None else accuracies)
+        if tau is None:
+            return
+        for ex in self.ex_clients:
+            if ex is not None and ex.delta is not None:
+                ex.delta.tau = tau
 
     # -- embedding exchange helpers ---------------------------------------------
 
@@ -337,12 +382,16 @@ class FederatedGNNTrainer:
 
     # -- lifecycle ---------------------------------------------------------------
 
-    def pretrain_round(self) -> None:
+    def pretrain_round(self, client_ids: list[int] | None = None) -> None:
         """§3.2.1: initialise push-node embeddings on the unexpanded local
-        subgraphs (remote neighbours masked) and seed the server."""
+        subgraphs (remote neighbours masked) and seed the server.  A
+        fedsvc worker passes its own ``client_ids`` so each process
+        seeds exactly the rows it owns (push sets are disjoint across
+        clients, so order never matters)."""
         if self.exchange is None:
             return
-        for ci, sh in enumerate(self.shards):
+        for ci in (range(self.k) if client_ids is None else client_ids):
+            sh = self.shards[ci]
             if len(sh.push_nodes) == 0:
                 continue
             outs = gnn.full_propagate(self.params, self.shard_arrays[ci],
@@ -351,86 +400,103 @@ class FederatedGNNTrainer:
             vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
             self.ex_clients[ci].push(sh.push_nodes, vals)
 
-    def evaluate(self) -> float:
-        outs = gnn.full_propagate(self.params, self.eval_arrays, None,
-                                  conv=self.conv)
+    def evaluate(self, params=None) -> float:
+        outs = gnn.full_propagate(
+            self.params if params is None else params,
+            self.eval_arrays, None, conv=self.conv)
         pred = np.asarray(jnp.argmax(outs[-1], axis=-1))
         return float((pred[self.test_idx] ==
                       self.g.labels[self.test_idx]).mean())
 
-    def run_round(self, round_idx: int, cum_time: float) -> RoundStats:
+    def client_round(self, ci: int, params=None, *,
+                     fill_cache: bool = True) -> ClientRoundResult:
+        """One client's share of a round: cache fill (pull), sampling,
+        local epochs, push planning.  The in-process :meth:`run_round`
+        loops this over all clients; a fedsvc worker process runs it for
+        the client(s) it owns.  The returned push plan is *not* applied
+        — the caller commits it once every client has pulled (server
+        static within the round, §4.2)."""
         st = self.strategy
-        phases = PhaseTimes()
-        client_times: list[float] = []
-        all_rpc_sizes: list[int] = []
-        new_params, weights, losses = [], [], []
-        push_plans: list[tuple[int, PushPlan]] = []
-
-        for ci, sh in enumerate(self.shards):
-            p = PhaseTimes()
+        sh = self.shards[ci]
+        p = PhaseTimes()
+        if fill_cache:
             self._fill_cache(ci)
-            # pre-sample the round's minibatches (sampling is part of the
-            # measured train phase, like DGL's dataloader)
-            t0 = time.perf_counter()
-            epochs_batches = [list(self.samplers[ci].epoch())
-                              for _ in range(self.epochs)]
-            sample_t = time.perf_counter() - t0
-            p.pull, p.dynamic_pull, sizes = self._pull_time(
-                ci, [mb for ep in epochs_batches for mb in ep])
-            all_rpc_sizes += sizes
+        # pre-sample the round's minibatches (sampling is part of the
+        # measured train phase, like DGL's dataloader)
+        t0 = time.perf_counter()
+        epochs_batches = [list(self.samplers[ci].epoch())
+                          for _ in range(self.epochs)]
+        sample_t = time.perf_counter() - t0
+        p.pull, p.dynamic_pull, sizes = self._pull_time(
+            ci, [mb for ep in epochs_batches for mb in ep])
 
-            params = self.params
-            opt_state = self.opt.init(params)
-            t_train = sample_t
-            push_plan: Optional[PushPlan] = None
-            loss = jnp.zeros(())
-            for e, batches in enumerate(epochs_batches, start=1):
-                t0 = time.perf_counter()
-                for mb in batches:
-                    batch = gnn.blocks_to_arrays(mb)
-                    params, opt_state, loss = self._train_step(
-                        params, opt_state, batch, self.feats[ci],
-                        self._caches[ci], self.labels[ci])
-                jax.block_until_ready(loss)
-                t_train += time.perf_counter() - t0
-                if st.overlap_push and e == self.epochs - 1:
-                    # §4.2: stale push computed from the epoch-(ε−1) model
-                    push_plan, p.push_compute, p.push_transfer = \
-                        self._compute_push(ci, params)
-            if not st.overlap_push or self.epochs < 2:
+        params = self.params if params is None else params
+        opt_state = self.opt.init(params)
+        t_train = sample_t
+        push_plan: Optional[PushPlan] = None
+        loss = jnp.zeros(())
+        for e, batches in enumerate(epochs_batches, start=1):
+            t0 = time.perf_counter()
+            for mb in batches:
+                batch = gnn.blocks_to_arrays(mb)
+                params, opt_state, loss = self._train_step(
+                    params, opt_state, batch, self.feats[ci],
+                    self._caches[ci], self.labels[ci])
+            jax.block_until_ready(loss)
+            t_train += time.perf_counter() - t0
+            if st.overlap_push and e == self.epochs - 1:
+                # §4.2: stale push computed from the epoch-(ε−1) model
                 push_plan, p.push_compute, p.push_transfer = \
                     self._compute_push(ci, params)
-            p.train = t_train
-            client_times.append(p.client_total(
+        if not st.overlap_push or self.epochs < 2:
+            push_plan, p.push_compute, p.push_transfer = \
+                self._compute_push(ci, params)
+        p.train = t_train
+        return ClientRoundResult(
+            client_id=ci, params=params, phases=p, rpc_sizes=sizes,
+            push_plan=push_plan,
+            weight=float(len(sh.train_vertices())),
+            loss=float(loss),
+            client_time=p.client_total(
                 overlap=st.overlap_push,
                 interference=st.overlap_interference, epochs=self.epochs))
-            if push_plan is not None:
-                push_plans.append((ci, push_plan))
-            new_params.append(params)
-            weights.append(float(len(sh.train_vertices())))
-            losses.append(float(loss))
+
+    def run_round(self, round_idx: int, cum_time: float) -> RoundStats:
+        self.set_round_tau(round_idx)
+        phases = PhaseTimes()
+        all_rpc_sizes: list[int] = []
+
+        results = [self.client_round(ci) for ci in range(self.k)]
+        for res in results:
+            all_rpc_sizes += res.rpc_sizes
             for name in ("pull", "train", "dynamic_pull", "push_compute",
                          "push_transfer"):
                 setattr(phases, name, max(getattr(phases, name),
-                                          getattr(p, name)))
+                                          getattr(res.phases, name)))
 
         # all clients pulled before anyone pushes (server is static
         # within the round) — apply the planned pushes now.
-        for ci, plan in push_plans:
-            self.ex_clients[ci].apply_push(plan)
+        for res in results:
+            if res.push_plan is not None:
+                self.ex_clients[res.client_id].apply_push(res.push_plan)
 
-        # FedAvg + validation on the aggregation server.
+        # FedAvg + validation on the aggregation server.  The leaf-wise
+        # fedavg_leaves is shared with the fedsvc coordinator, so the
+        # multi-process sync path aggregates with the same float32
+        # arithmetic in the same client order.
         t0 = time.perf_counter()
-        wsum = sum(weights)
-        self.params = jax.tree_util.tree_map(
-            lambda *ps: sum(w * p for w, p in zip(weights, ps)) / wsum,
-            *new_params)
+        weights = [res.weight for res in results]
+        agg = fedavg_leaves([self.params_leaves(res.params)
+                             for res in results], weights)
+        self.params = self.leaves_to_params(agg)
         acc = self.evaluate()
         t_agg = time.perf_counter() - t0 \
             + 2 * self.net.model_transfer_time(self._num_params())
         phases.agg = t_agg
+        self.acc_history.append(acc)
+        losses = [res.loss for res in results]
 
-        round_time = max(client_times) + t_agg
+        round_time = max(res.client_time for res in results) + t_agg
         return RoundStats(
             round_idx=round_idx,
             accuracy=acc,

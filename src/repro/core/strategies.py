@@ -15,7 +15,7 @@ are just constructor calls.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +40,52 @@ class Strategy:
     # needs live embed_server listeners (repro.launch.embed_server) and
     # the trainer's transport_addrs pointing at them.
     transport: str = "auto"
+    # EF-SGD style error feedback: accumulate the codec quantization
+    # residual client-side and fold it into the next push, so lossy
+    # codecs (fp16/int8) stop biasing converged embeddings.
+    error_feedback: bool = False
+    # -- adaptive τ (delta_threshold schedule) ------------------------------
+    # constant — τ fixed at delta_threshold every round (historical)
+    # linear   — τ ramps 0 → delta_threshold over delta_rounds rounds
+    #            (push everything early, when embeddings move fast)
+    # plateau  — τ = 0 until the best accuracy stops improving by more
+    #            than plateau_eps over plateau_window rounds, then
+    #            delta_threshold
+    delta_schedule: str = "constant"
+    delta_rounds: int = 10
+    plateau_window: int = 3
+    plateau_eps: float = 2e-3
+    # -- control plane (repro.fedsvc) ---------------------------------------
+    # aggregation: sync — barriered FedAvg, bit-compatible with the
+    # in-process run_round; async — FedBuff-style buffered aggregation:
+    # the coordinator folds every `buffer_size` client deltas into the
+    # global model, each scaled by staleness_decay ** staleness.
+    aggregation: str = "sync"
+    buffer_size: int = 2
+    staleness_decay: float = 0.5
+
+    def delta_for_round(self, round_idx: int,
+                        accuracies: Sequence[float] = ()) -> Optional[float]:
+        """τ in effect for ``round_idx`` given accuracies of *finished*
+        rounds — the adaptive-τ schedule (ROADMAP follow-up)."""
+        if self.delta_threshold is None:
+            return None
+        if self.delta_schedule == "constant":
+            return self.delta_threshold
+        if self.delta_schedule == "linear":
+            frac = min(1.0, round_idx / max(1, self.delta_rounds))
+            return self.delta_threshold * frac
+        if self.delta_schedule == "plateau":
+            w = self.plateau_window
+            if len(accuracies) < w + 1:
+                return 0.0
+            recent = max(accuracies[-w:])
+            before = max(accuracies[:-w])
+            return self.delta_threshold \
+                if recent - before < self.plateau_eps else 0.0
+        raise ValueError(
+            f"unknown delta_schedule {self.delta_schedule!r}; "
+            "expected constant | linear | plateau")
 
     def describe(self) -> str:
         bits = [self.name]
@@ -49,6 +95,14 @@ class Strategy:
             bits.append(self.codec)
         if self.delta_threshold is not None:
             bits.append(f"delta_tau={self.delta_threshold:g}")
+            if self.delta_schedule != "constant":
+                bits.append(f"tau_sched={self.delta_schedule}")
+        if self.error_feedback:
+            bits.append("ef")
+        if self.aggregation != "sync":
+            bits.append(f"agg={self.aggregation}"
+                        f"(m={self.buffer_size},"
+                        f"decay={self.staleness_decay:g})")
         if self.num_server_shards > 1:
             bits.append(f"shards={self.num_server_shards}")
         if self.transport != "auto":

@@ -40,7 +40,7 @@ sweeps the cross-product against the fp32 full-push baseline.
 from .codec import (Fp16Codec, Fp32Codec, Int8Codec, WireCodec,
                     available_codecs, get_codec)
 from .client import ExchangeClient, PushPlan
-from .delta import DeltaTracker
+from .delta import DeltaTracker, ErrorFeedback
 from .transport import (InProcessTransport, ShardedTransport, Transport,
                         make_transport)
 
@@ -50,7 +50,8 @@ _SOCKET_EXPORTS = ("TcpTransport", "RpcSample", "parse_address")
 
 __all__ = [
     "WireCodec", "Fp32Codec", "Fp16Codec", "Int8Codec", "get_codec",
-    "available_codecs", "DeltaTracker", "Transport", "InProcessTransport",
+    "available_codecs", "DeltaTracker", "ErrorFeedback", "Transport",
+    "InProcessTransport",
     "ShardedTransport", "TcpTransport", "RpcSample", "parse_address",
     "make_transport", "ExchangeClient", "PushPlan",
 ]

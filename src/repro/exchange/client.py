@@ -24,26 +24,31 @@ import dataclasses
 import numpy as np
 
 from .codec import WireCodec, get_codec
-from .delta import DeltaTracker
+from .delta import DeltaTracker, ErrorFeedback
 from .transport import Transport
 
 
 @dataclasses.dataclass
 class PushPlan:
     """A priced, not-yet-applied push.  Abandoning a plan has no side
-    effects: the delta shadow is only refreshed when the plan is
-    applied."""
+    effects: the delta shadow and error-feedback residuals are only
+    refreshed when the plan is applied."""
     global_ids: np.ndarray            # delta-selected rows
     layer_values: list[np.ndarray]    # decoded fp32 (post codec roundtrip)
-    raw_values: list[np.ndarray]      # pre-codec fp32 (shadow refresh)
+    raw_values: list[np.ndarray]      # pre-codec fp32 (shadow refresh);
+                                      # EF-compensated when EF is on
     transfer_time: float
     n_selected: int
     n_total: int
+    # real-wire plans carry raw rows in layer_values (the socket does
+    # the encoding), so the decoded view EF needs rides separately
+    ef_decoded: list[np.ndarray] | None = None
 
 
 class ExchangeClient:
     def __init__(self, transport: Transport, codec: WireCodec | str = "fp32",
-                 *, delta_threshold: float | None = None):
+                 *, delta_threshold: float | None = None,
+                 error_feedback: bool = False):
         self.transport = transport
         self.codec = get_codec(codec)
         if transport.wire_is_real:
@@ -57,6 +62,8 @@ class ExchangeClient:
         self.shared_layers = transport.num_layers - 1
         self.delta = None if delta_threshold is None else DeltaTracker(
             delta_threshold, self.shared_layers, self.hidden)
+        self.ef = ErrorFeedback(self.shared_layers, self.hidden) \
+            if error_feedback else None
 
     @property
     def bytes_per_scalar(self) -> float:
@@ -106,22 +113,35 @@ class ExchangeClient:
         h^1..h^{L-1} rows without touching the server."""
         n_total = len(global_ids)
         raw = [np.asarray(v, np.float32) for v in layer_values]
+        # EF folds the carried residual in *before* delta selection, so
+        # the τ rule and the shadow both see the compensated values the
+        # wire will actually carry.
+        if self.ef is not None:
+            raw = self.ef.compensate(np.asarray(global_ids), raw)
         if self.delta is not None:
             sel = self.delta.select(global_ids, raw)
             global_ids = np.asarray(global_ids)[sel]
             raw = [v[sel] for v in raw]
         # A real-wire transport codec-encodes the write on the socket —
         # the server decodes the actual payload bytes; roundtripping here
-        # too would cross the (lossy) wire twice.
-        decoded = raw if self.transport.wire_is_real \
-            else [self.codec.roundtrip(v) for v in raw]
+        # too would cross the (lossy) wire twice.  EF still needs the
+        # decoded view locally (codecs are deterministic, so this local
+        # roundtrip equals what the server stores from the socket bytes).
+        ef_decoded = None
+        if self.transport.wire_is_real:
+            decoded = raw
+            if self.ef is not None:
+                ef_decoded = [self.codec.roundtrip(v) for v in raw]
+        else:
+            decoded = [self.codec.roundtrip(v) for v in raw]
         t = self.transport.transfer_time(global_ids, self.shared_layers,
                                          self.bytes_per_scalar) \
             if len(global_ids) else 0.0
         return PushPlan(global_ids=np.asarray(global_ids),
                         layer_values=decoded, raw_values=raw,
                         transfer_time=t,
-                        n_selected=len(global_ids), n_total=n_total)
+                        n_selected=len(global_ids), n_total=n_total,
+                        ef_decoded=ef_decoded)
 
     def apply_push(self, plan: PushPlan) -> float:
         """Commit a planned push: store what the server decodes, refresh
@@ -131,6 +151,10 @@ class ExchangeClient:
         self.transport.write(plan.global_ids, plan.layer_values)
         if self.delta is not None:
             self.delta.commit(plan.global_ids, plan.raw_values)
+        if self.ef is not None:
+            self.ef.commit(plan.global_ids, plan.raw_values,
+                           plan.ef_decoded if plan.ef_decoded is not None
+                           else plan.layer_values)
         return self.transport.account(plan.global_ids, self.shared_layers,
                                       self.bytes_per_scalar)
 

@@ -1,4 +1,4 @@
-"""Delta pushes: only ship rows that moved since the last push (τ rule).
+"""Delta pushes + error feedback: client-side state that shapes pushes.
 
 As federated training converges, most push-node embeddings barely change
 round-over-round, yet the seed pushes the full table every round.  Each
@@ -22,41 +22,57 @@ import numpy as np
 _EPS = 1e-12
 
 
-class DeltaTracker:
+class GidRowTable:
+    """Per-gid (layers, hidden) fp32 row storage with capacity-doubling
+    growth (amortized O(1) per new id, like EmbeddingServer.register).
+    The shared substrate of :class:`DeltaTracker` (shadow rows) and
+    :class:`ErrorFeedback` (residual rows)."""
+
+    def __init__(self, num_layers_shared: int, hidden: int):
+        self.layers = num_layers_shared
+        self.hidden = hidden
+        self._slot: dict[int, int] = {}             # gid -> row
+        self._buf = np.zeros((0, num_layers_shared, hidden), np.float32)
+
+    @property
+    def _live(self) -> np.ndarray:
+        """View of the allocated (non-headroom) rows."""
+        return self._buf[: len(self._slot)]
+
+    def _rows(self, gids: np.ndarray, *, create: bool) -> np.ndarray:
+        """Row indices for ``gids``; unseen ids get fresh zero rows when
+        ``create``, else -1."""
+        if create:
+            new = [int(g) for g in gids if int(g) not in self._slot]
+            if new:
+                base = len(self._slot)
+                if base + len(new) > len(self._buf):
+                    cap = max(16, len(self._buf))
+                    while cap < base + len(new):
+                        cap *= 2
+                    buf = np.zeros((cap, self.layers, self.hidden),
+                                   np.float32)
+                    buf[:base] = self._buf[:base]
+                    self._buf = buf
+                for i, g in enumerate(new):
+                    self._slot[g] = base + i
+        return np.fromiter((self._slot.get(int(g), -1) for g in gids),
+                           np.int64, count=len(gids))
+
+
+class DeltaTracker(GidRowTable):
     """Per-client shadow of last-pushed rows, keyed by global vertex id."""
 
     def __init__(self, threshold: float, num_layers_shared: int, hidden: int):
         assert threshold >= 0.0
+        super().__init__(num_layers_shared, hidden)
         self.tau = float(threshold)
-        self.layers = num_layers_shared
-        self.hidden = hidden
-        self._slot: dict[int, int] = {}             # gid -> shadow row
-        self._buf = np.zeros((0, num_layers_shared, hidden), np.float32)
         # telemetry: (selected, total) row counts per select() call
         self.history: list[tuple[int, int]] = []
 
     @property
     def _shadow(self) -> np.ndarray:
-        return self._buf[: len(self._slot)]
-
-    def _ensure_slots(self, gids: np.ndarray) -> np.ndarray:
-        """Shadow rows for gids, allocating slots for unseen ids.
-        Capacity-doubling growth, like EmbeddingServer.register —
-        amortized O(1) per new id."""
-        new = [int(g) for g in gids if int(g) not in self._slot]
-        if new:
-            base = len(self._slot)
-            if base + len(new) > len(self._buf):
-                cap = max(16, len(self._buf))
-                while cap < base + len(new):
-                    cap *= 2
-                buf = np.zeros((cap, self.layers, self.hidden), np.float32)
-                buf[:base] = self._buf[:base]
-                self._buf = buf
-            for i, g in enumerate(new):
-                self._slot[g] = base + i
-        return np.fromiter((self._slot[int(g)] for g in gids),
-                           np.int64, count=len(gids))
+        return self._live
 
     def select(self, gids: np.ndarray, layer_values: list[np.ndarray]
                ) -> np.ndarray:
@@ -71,17 +87,15 @@ class DeltaTracker:
         assert len(layer_values) == self.layers
         if len(gids) == 0:
             return np.zeros(0, bool)
-        known = np.fromiter((int(g) in self._slot for g in gids),
-                            bool, count=len(gids))
+        rows_all = self._rows(gids, create=False)
+        known = rows_all >= 0
         sel = ~known                       # never-pushed rows always go
         if known.any():
             stacked = np.stack(
                 [np.asarray(v, np.float32)[known] for v in layer_values],
                 axis=1)                    # (n_known, layers, hidden)
-            rows = np.fromiter((self._slot[int(g)] for g in gids[known]),
-                               np.int64, count=int(known.sum()))
-            old = self._shadow[rows]
-            n = len(rows)
+            old = self._shadow[rows_all[known]]
+            n = len(old)
             delta = np.linalg.norm((stacked - old).reshape(n, -1), axis=1)
             ref = np.linalg.norm(old.reshape(n, -1), axis=1)
             sel[known] = delta > self.tau * np.maximum(ref, _EPS)
@@ -96,8 +110,8 @@ class DeltaTracker:
             return
         stacked = np.stack([np.asarray(v, np.float32) for v in layer_values],
                            axis=1)
-        rows = self._ensure_slots(gids)
-        self._shadow[rows] = stacked
+        rows = self._rows(gids, create=True)   # may grow/rebind _buf
+        self._buf[rows] = stacked
 
     @property
     def total_selected(self) -> int:
@@ -106,3 +120,50 @@ class DeltaTracker:
     @property
     def total_rows(self) -> int:
         return sum(n for _, n in self.history)
+
+
+class ErrorFeedback(GidRowTable):
+    """EF-SGD-style residual accumulator for lossy wire codecs.
+
+    A lossy codec (fp16/int8) rounds every pushed row; without
+    correction the rounding error is *re-applied* every round and the
+    server's converged embeddings stay biased by up to one quantization
+    step.  Error feedback folds the previous push's residual into the
+    next push before encoding:
+
+        compensated = raw + residual
+        wire        = encode(compensated)
+        residual'   = compensated − decode(wire)
+
+    so the error is carried forward instead of dropped, and the
+    *time-averaged* server value tracks the true fp32 embedding."""
+
+    def compensate(self, gids: np.ndarray,
+                   layer_values: list[np.ndarray]) -> list[np.ndarray]:
+        """raw rows + carried residual (unseen ids carry zero).  Pure
+        read — residuals change only on :meth:`commit`."""
+        if len(gids) == 0:
+            return [np.asarray(v, np.float32) for v in layer_values]
+        rows = self._rows(gids, create=False)
+        known = rows >= 0
+        out = []
+        for l, v in enumerate(layer_values):
+            v = np.array(v, np.float32, copy=True)
+            if known.any():
+                v[known] += self._buf[rows[known], l]
+            out.append(v)
+        return out
+
+    def commit(self, gids: np.ndarray, compensated: list[np.ndarray],
+               decoded: list[np.ndarray]) -> None:
+        """Store ``compensated − decoded`` for rows whose push landed."""
+        if len(gids) == 0:
+            return
+        rows = self._rows(gids, create=True)
+        for l in range(self.layers):
+            self._buf[rows, l] = (np.asarray(compensated[l], np.float32)
+                                  - np.asarray(decoded[l], np.float32))
+
+    @property
+    def max_abs_residual(self) -> float:
+        return float(np.abs(self._live).max()) if len(self._slot) else 0.0

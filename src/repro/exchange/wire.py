@@ -133,6 +133,67 @@ def frame_nbytes(body_len: int) -> int:
     return _LEN.size + body_len
 
 
+# -- tensor lists -------------------------------------------------------------
+#
+# Generic dtype/shape-tagged array framing, used by the federated
+# control plane (repro.fedsvc.protocol) to move model leaves byte-
+# exactly.  Unlike the embedding payload blocks above, tensors carry
+# their own headers: the coordinator is model-agnostic and cannot infer
+# shapes from an out-of-band (num_layers, hidden) contract.
+
+def build_tensors(arrays) -> bytes:
+    """[np.ndarray] → self-describing wire bytes (dtype, shape, raw)."""
+    out = [_U16.pack(len(arrays))]
+    for a in arrays:
+        a = np.asarray(a)
+        if a.ndim:                 # ascontiguousarray promotes 0-d to 1-d
+            a = np.ascontiguousarray(a)
+        dt = a.dtype.str.encode("ascii")            # e.g. b'<f4'
+        out.append(_U8.pack(len(dt)) + dt)
+        out.append(_U8.pack(a.ndim))
+        out.extend(_U64.pack(d) for d in a.shape)
+        out.append(a.tobytes())
+    return b"".join(out)
+
+
+def parse_tensors(view: memoryview, offset: int = 0
+                  ) -> tuple[list[np.ndarray], int]:
+    """Wire bytes → ([arrays], next offset).  Arrays are copies — they
+    must outlive the frame buffer."""
+    (count,) = _U16.unpack_from(view, offset)
+    offset += _U16.size
+    out = []
+    for _ in range(count):
+        (dlen,) = _U8.unpack_from(view, offset)
+        offset += _U8.size
+        dtype = np.dtype(bytes(view[offset:offset + dlen]).decode("ascii"))
+        offset += dlen
+        (ndim,) = _U8.unpack_from(view, offset)
+        offset += _U8.size
+        shape = []
+        for _ in range(ndim):
+            (d,) = _U64.unpack_from(view, offset)
+            shape.append(d)
+            offset += _U64.size
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize \
+            if shape else dtype.itemsize
+        a = np.frombuffer(view, dtype, nbytes // dtype.itemsize,
+                          offset=offset).reshape(shape).copy()
+        offset += nbytes
+        out.append(a)
+    return out, offset
+
+
+def tensors_nbytes(arrays) -> int:
+    """Wire size of :func:`build_tensors` output (headers included)."""
+    total = _U16.size
+    for a in arrays:
+        a = np.asarray(a)
+        total += _U8.size + len(a.dtype.str) + _U8.size \
+            + _U64.size * a.ndim + a.nbytes
+    return total
+
+
 # -- request builders ---------------------------------------------------------
 
 def _gid_bytes(global_ids: np.ndarray) -> bytes:

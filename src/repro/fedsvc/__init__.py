@@ -1,0 +1,62 @@
+"""Federated control plane: coordinator service + client workers.
+
+PR 2 made the *embedding* plane real (live TCP embed_server shards);
+this package makes the *weight* plane real.  Instead of
+``FederatedGNNTrainer.run_round`` iterating clients sequentially and
+FedAvg-aggregating inline, the deployment decomposes into:
+
+  coordinator.py — threaded TCP service (length-prefixed framing reused
+                   from repro.exchange.wire) that registers workers,
+                   serves the current global model, collects per-round
+                   client updates, and aggregates with pluggable
+                   policies: synchronous FedAvg (bit-compatible with the
+                   in-process trainer) or asynchronous FedBuff-style
+                   buffered aggregation with staleness-weighted deltas
+                   (Strategy.buffer_size / staleness_decay).
+  worker.py      — a client process wrapping one or more clients' share
+                   of the trainer round (sampling, pull/dynamic-pull/
+                   push through ExchangeClient + TcpTransport, local
+                   epochs, overlap push) via the refactored
+                   ``FederatedGNNTrainer.client_round``; scenario
+                   injection (pacing multiplier, straggler delay,
+                   dropout probability) with dual modelled/measured
+                   round-time ledgers, same discipline as TcpTransport.
+  protocol.py    — the coordinator wire protocol: JSON headers + raw
+                   tensor blocks, byte-exact model round-trips.
+  aggregation.py — the pure math, shared by the in-process trainer and
+                   the coordinator so the two paths cannot drift.
+  runtime.py     — RunConfig: one declarative description of a
+                   deployment that every participant (coordinator CLI,
+                   worker CLI, tests, benchmarks) rebuilds
+                   deterministically.
+
+CLIs live in repro.launch.fed_coordinator / repro.launch.fed_worker;
+``benchmarks/bench_control_plane.py`` compares sync vs async
+time-to-accuracy under injected stragglers.
+"""
+
+# Lazy exports (PEP 562): importing repro.fedsvc.aggregation from
+# repro.core must not drag in the worker (which imports repro.core).
+_EXPORTS = {
+    "fedavg_leaves": "aggregation",
+    "staleness_scale": "aggregation",
+    "apply_buffered_deltas": "aggregation",
+    "CoordinatorClient": "protocol",
+    "CoordinatorState": "coordinator",
+    "serve_in_thread": "coordinator",
+    "FedWorker": "worker",
+    "WorkerScenario": "worker",
+    "run_in_thread": "worker",
+    "RunConfig": "runtime",
+    "EvalHarness": "runtime",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,78 @@
+"""Weight-aggregation math, shared by trainer and coordinator.
+
+Everything here operates on *leaves*: the flat list of numpy arrays a
+params pytree flattens to (``jax.tree_util.tree_flatten`` order).  The
+in-process :class:`repro.core.federated.FederatedGNNTrainer` and the TCP
+:mod:`repro.fedsvc.coordinator` both call :func:`fedavg_leaves`, which
+is what makes the multi-process sync path numerically interchangeable
+with the single-process simulator — there is one FedAvg, not two.
+
+Float discipline: all arithmetic stays in the leaf dtype (float32 for
+every GNN param).  Weights are rounded to float32 before multiplying —
+the same rounding jax's weak-typed ``python_float * f32_array`` does —
+so numpy-side aggregation reproduces the historical jnp tree_map
+bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def fedavg_leaves(leaves_list: Sequence[Sequence[np.ndarray]],
+                  weights: Sequence[float]) -> list[np.ndarray]:
+    """Weighted FedAvg over per-client leaf lists.
+
+    ``leaves_list[k][i]`` is client k's i-th leaf; ``weights[k]`` its
+    aggregation weight (train-vertex count).  Clients must be passed in
+    a canonical order (ascending client id) — float addition is not
+    associative, and the order is part of the contract."""
+    assert len(leaves_list) == len(weights) > 0
+    wsum = np.float32(sum(weights))
+    out = []
+    for group in zip(*leaves_list):
+        acc = sum(np.float32(w) * np.asarray(l)
+                  for w, l in zip(weights, group))
+        out.append(np.asarray(acc / wsum))
+    return out
+
+
+def staleness_scale(staleness: int, decay: float) -> float:
+    """FedBuff-style staleness discount: ``decay ** staleness``.
+
+    ``staleness`` is how many aggregations the global model advanced
+    between the worker pulling its base model and its update arriving;
+    0 ⇒ fresh update, full weight."""
+    return float(decay) ** max(0, int(staleness))
+
+
+def apply_buffered_deltas(
+        model_leaves: Sequence[np.ndarray],
+        updates: Sequence[tuple[float, float, Sequence[np.ndarray]]],
+) -> list[np.ndarray]:
+    """Fold one buffer of async updates into the global model.
+
+    ``updates`` rows are ``(weight, scale, delta_leaves)`` where
+    ``delta = local_params - base_model`` computed client-side and
+    ``scale`` is the staleness discount.  The model moves by the
+    scaled-weighted mean of the deltas:
+
+        model += Σ_k w_k·s_k·Δ_k / Σ_k w_k·s_k
+
+    which reduces to sync FedAvg when every update is fresh (s=1) and
+    every client participated in the buffer.  A drain whose scaled
+    weights all vanish (e.g. staleness_decay=0 and only stale updates)
+    moves the model by nothing — the limit behaviour, not a NaN."""
+    assert updates
+    ws = [np.float32(w) * np.float32(s) for w, s, _ in updates]
+    wsum = np.float32(sum(float(w) for w in ws))
+    if wsum == 0.0:
+        return [np.asarray(b) for b in model_leaves]
+    out = []
+    for i, base in enumerate(model_leaves):
+        step = sum(w * np.asarray(d[i]) for w, (_, _, d) in
+                   zip(ws, updates))
+        out.append(np.asarray(np.asarray(base) + step / wsum))
+    return out

@@ -1,0 +1,467 @@
+"""Threaded TCP weight-aggregation coordinator.
+
+The control-plane counterpart of ``repro.launch.embed_server``: one
+accept loop, one thread per worker connection, a lock + condition
+variable over the shared round state.  Blocking RPCs (``get_model``,
+``wait_pulled``) park their connection thread on the condition until
+the round advances — workers never poll.
+
+Aggregation policies (Strategy.aggregation):
+
+  sync  — barriered FedAvg.  A round aggregates when every *active*
+          client's update arrived, in ascending client-id order through
+          :func:`repro.fedsvc.aggregation.fedavg_leaves` — the exact
+          function the in-process trainer uses, so a multi-process sync
+          round reproduces ``FederatedGNNTrainer.run_round`` numerics.
+  async — FedBuff-style buffered aggregation.  Updates carry deltas
+          (local − base model); every ``buffer_size`` arrivals the
+          model moves by the staleness-discounted weighted mean of the
+          buffered deltas (``staleness_decay ** staleness``) and the
+          version bumps.  No barriers: fast workers never wait for
+          stragglers, which is the whole point.
+
+Dropout: a worker whose connection dies mid-round is deregistered; the
+pull barrier and the aggregation trigger re-evaluate against the
+surviving client set, so one dead worker cannot wedge the round.
+
+Dual ledgers, same discipline as TcpTransport: every aggregation
+records the *modelled* round time (max over client-reported modelled
+times + modelled model exchange + measured agg/eval compute) next to
+the *measured* wall clock since serving began.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import NetworkModel
+from repro.exchange import wire
+
+from . import protocol
+from .aggregation import apply_buffered_deltas, fedavg_leaves, staleness_scale
+
+
+class CoordinatorState:
+    """Shared state of one coordinator service."""
+
+    def __init__(self, *, num_clients: int, num_rounds: int,
+                 mode: str = "sync", buffer_size: int = 2,
+                 staleness_decay: float = 0.5,
+                 init_leaves: Optional[Sequence[np.ndarray]] = None,
+                 eval_fn: Optional[Callable[[list[np.ndarray]], float]] = None,
+                 net: NetworkModel | None = None):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"unknown aggregation mode {mode!r}")
+        self.num_clients = num_clients
+        self.num_rounds = num_rounds          # sync: rounds; async: aggs
+        self.mode = mode
+        self.buffer_size = max(1, buffer_size)
+        self.staleness_decay = staleness_decay
+        self.eval_fn = eval_fn
+        self.net = net or NetworkModel()
+
+        self.cond = threading.Condition()
+        self.stop = threading.Event()
+        self.leaves: Optional[list[np.ndarray]] = \
+            None if init_leaves is None else [np.asarray(l)
+                                              for l in init_leaves]
+        self.round = 0                        # sync round index
+        self.version = 0                      # async aggregation count
+        self.workers: dict[str, set[int]] = {}          # worker -> clients
+        self._conn_worker: dict[int, str] = {}          # conn id -> worker
+        self._worker_conn: dict[str, int] = {}          # worker -> live conn
+        self.pulled: set[int] = set()                   # this round
+        self.updates: dict[int, dict] = {}              # cid -> record
+        self.buffer: list[dict] = []                    # async pending
+        self.history: list[dict] = []                   # per aggregation
+        self.acc_history: list[float] = []
+        self.cum_modelled_s = 0.0
+        self._t0: Optional[float] = None      # first model served
+        self._assembled = False               # all K clients registered
+        self._aggregating = False             # async drain in flight
+
+    # -- helpers (call with self.cond held) --------------------------------
+
+    @property
+    def active_clients(self) -> set[int]:
+        out: set[int] = set()
+        for cids in self.workers.values():
+            out |= cids
+        return out
+
+    @property
+    def assembled(self) -> bool:
+        """Latches True once every client id registered.  get_model
+        gates on this so no worker starts round 0 before all workers
+        finished their pretrain pushes (a later dropout must not
+        un-assemble an already-running deployment)."""
+        if not self._assembled \
+                and len(self.active_clients) == self.num_clients:
+            self._assembled = True
+        return self._assembled
+
+    @property
+    def done(self) -> bool:
+        count = self.round if self.mode == "sync" else self.version
+        return count >= self.num_rounds
+
+    def _num_params(self) -> int:
+        return sum(int(np.prod(l.shape)) for l in self.leaves or [])
+
+    def _wall(self) -> float:
+        return 0.0 if self._t0 is None else time.perf_counter() - self._t0
+
+    def _wait(self, predicate) -> None:
+        while not predicate() and not self.stop.is_set():
+            self.cond.wait(timeout=0.2)
+        if self.stop.is_set() and not predicate():
+            raise ConnectionError("coordinator stopping")
+
+    # -- aggregation -------------------------------------------------------
+
+    def _maybe_aggregate_sync(self) -> None:
+        active = self.active_clients
+        if self.done or not self.updates:
+            return
+        if not active or not (active <= set(self.updates)):
+            return
+        ups = [self.updates[cid] for cid in sorted(self.updates)]
+        t0 = time.perf_counter()
+        self.leaves = fedavg_leaves([u["leaves"] for u in ups],
+                                    [u["weight"] for u in ups])
+        acc = self.eval_fn(self.leaves) if self.eval_fn else float("nan")
+        agg_s = time.perf_counter() - t0 \
+            + 2 * self.net.model_transfer_time(self._num_params())
+        round_modelled = max(u["modelled_s"] for u in ups) + agg_s
+        self.cum_modelled_s += round_modelled
+        self.acc_history.append(acc)
+        self.history.append({
+            "round": self.round, "mode": "sync", "accuracy": acc,
+            "clients": sorted(self.updates),
+            "mean_loss": float(np.mean([u["loss"] for u in ups])),
+            "round_modelled_s": round_modelled,
+            "cum_modelled_s": self.cum_modelled_s,
+            "round_measured_s": max(u["measured_s"] for u in ups) + agg_s,
+            "wall_s": self._wall(),
+        })
+        self.round += 1
+        self.pulled.clear()
+        self.updates.clear()
+        self.cond.notify_all()
+
+    def _maybe_aggregate_async(self) -> None:
+        """Drain the buffer under the lock, but fold + evaluate OUTSIDE
+        it — the whole point of async mode is that workers never wait,
+        and a full-graph eval under the coordinator's one condition
+        lock would stall every concurrent RPC.  ``_aggregating`` keeps
+        drains strictly sequential (the model moves one buffer at a
+        time); updates arriving during a drain just queue for the next
+        one, which the loop picks up after publishing."""
+        while not self.done and not self._aggregating \
+                and len(self.buffer) >= self.buffer_size:
+            ups, self.buffer = self.buffer, []
+            version = self.version
+            base = self.leaves                # replaced, never mutated
+            self._aggregating = True
+            self.cond.release()
+            try:
+                t0 = time.perf_counter()
+                scaled = [(u["weight"],
+                           staleness_scale(version - u["version"],
+                                           self.staleness_decay),
+                           u["leaves"]) for u in ups]
+                leaves = apply_buffered_deltas(base, scaled)
+                acc = self.eval_fn(leaves) if self.eval_fn \
+                    else float("nan")
+                agg_s = time.perf_counter() - t0 \
+                    + 2 * self.net.model_transfer_time(self._num_params())
+            finally:
+                self.cond.acquire()
+                self._aggregating = False
+            self.leaves = leaves
+            # async rounds overlap across workers: the modelled ledger
+            # advances by the slowest *buffered* contribution amortized
+            # over the buffer — with no barrier, client rounds pipeline,
+            # so the marginal cost per aggregation is one buffer drain,
+            # not a max-over-everyone round.
+            round_modelled = max(u["modelled_s"] for u in ups) \
+                / max(1, len(ups)) + agg_s
+            self.cum_modelled_s += round_modelled
+            self.acc_history.append(acc)
+            self.history.append({
+                "round": self.version, "mode": "async", "accuracy": acc,
+                "clients": sorted(u["client_id"] for u in ups),
+                "staleness": [version - u["version"] for u in ups],
+                "mean_loss": float(np.mean([u["loss"] for u in ups])),
+                "round_modelled_s": round_modelled,
+                "cum_modelled_s": self.cum_modelled_s,
+                "round_measured_s": max(u["measured_s"] for u in ups)
+                + agg_s,
+                "wall_s": self._wall(),
+            })
+            self.version += 1
+            self.cond.notify_all()
+
+    # -- connection lifecycle ----------------------------------------------
+
+    def disconnect(self, conn_id: int) -> None:
+        """Connection died (worker dropout): deregister its clients and
+        let any barrier / aggregation blocked on them re-evaluate.  A
+        stale connection of a worker that already re-registered on a
+        newer one must NOT deregister the live worker."""
+        with self.cond:
+            worker = self._conn_worker.pop(conn_id, None)
+            if worker is None or self._worker_conn.get(worker) != conn_id:
+                return
+            self._worker_conn.pop(worker, None)
+            self.workers.pop(worker, None)
+            if self.mode == "sync":
+                self._maybe_aggregate_sync()
+            self.cond.notify_all()
+
+    # -- request dispatch --------------------------------------------------
+
+    def handle(self, conn_id: int, body: bytes) -> bytes:
+        """One request body → one response body (never raises; blocking
+        ops wait on the condition inside)."""
+        try:
+            op, header, tensors = protocol.parse_body(body)
+        except Exception as e:
+            return protocol.build_err(f"bad request: {type(e).__name__}: {e}")
+        try:
+            if op == protocol.OP_HELLO:
+                return self._op_hello(conn_id, header, tensors)
+            if op == protocol.OP_GET_MODEL:
+                return self._op_get_model(header)
+            if op == protocol.OP_PULLED:
+                return self._op_pulled(header)
+            if op == protocol.OP_WAIT_PULLED:
+                return self._op_wait_pulled(header)
+            if op == protocol.OP_UPDATE:
+                return self._op_update(header, tensors)
+            if op == protocol.OP_STATS:
+                return self._op_stats()
+            if op == protocol.OP_SHUTDOWN:
+                self.stop.set()
+                with self.cond:
+                    self.cond.notify_all()
+                return protocol.build_ok()
+            return protocol.build_err(f"unknown opcode {op}")
+        except ConnectionError:
+            raise                      # let the conn loop tear down
+        except Exception as e:
+            return protocol.build_err(f"{type(e).__name__}: {e}")
+
+    def _op_hello(self, conn_id: int, header: dict, tensors) -> bytes:
+        worker = str(header["worker_id"])
+        cids = set(int(c) for c in header["client_ids"])
+        bad = [c for c in cids if not 0 <= c < self.num_clients]
+        if bad:
+            return protocol.build_err(
+                f"client ids {sorted(bad)} out of range for "
+                f"num_clients={self.num_clients}")
+        with self.cond:
+            taken = set()
+            for w, o in self.workers.items():
+                if w != worker:
+                    taken |= o & cids
+            if taken:
+                return protocol.build_err(
+                    f"client ids {sorted(taken)} already registered "
+                    "to another worker")
+            self.workers[worker] = cids
+            self._conn_worker[conn_id] = worker
+            self._worker_conn[worker] = conn_id
+            if header.get("has_init") and self.leaves is None:
+                self.leaves = [np.asarray(t) for t in tensors]
+            if self._t0 is None:
+                self._t0 = time.perf_counter()
+            self.cond.notify_all()
+            return protocol.build_ok({
+                "round": self.round, "version": self.version,
+                "mode": self.mode, "num_clients": self.num_clients,
+                "num_rounds": self.num_rounds})
+
+    def _op_get_model(self, header: dict) -> bytes:
+        want = int(header.get("round", 0))
+        with self.cond:
+            if self.mode == "sync":
+                self._wait(lambda: self.assembled
+                           and (self.round >= want or self.done))
+            else:
+                self._wait(lambda: self.assembled
+                           and self.leaves is not None)
+            if self.leaves is None:
+                return protocol.build_err("no model: no worker sent init "
+                                          "leaves yet")
+            # snapshot refs only — aggregation *replaces* self.leaves,
+            # never mutates it, so the (large) tensor serialization can
+            # run outside the coordinator's one condition lock
+            leaves = self.leaves
+            header = {"round": self.round, "version": self.version,
+                      "done": self.done, "accs": list(self.acc_history)}
+        return protocol.build_ok(header, leaves)
+
+    def _op_pulled(self, header: dict) -> bytes:
+        rnd = int(header["round"])
+        with self.cond:
+            if rnd == self.round:
+                self.pulled |= set(int(c) for c in header["client_ids"])
+                self.cond.notify_all()
+            return protocol.build_ok()
+
+    def _op_wait_pulled(self, header: dict) -> bytes:
+        rnd = int(header["round"])
+        with self.cond:
+            # barrier: every *surviving* client pulled, or the round
+            # already moved on (a late waiter must not deadlock)
+            self._wait(lambda: self.round != rnd
+                       or self.active_clients <= self.pulled)
+            return protocol.build_ok()
+
+    def _op_update(self, header: dict, tensors) -> bytes:
+        leaves = [np.asarray(t) for t in tensors]
+        rec = {
+            "client_id": int(header["client_id"]),
+            "weight": float(header["weight"]),
+            "loss": float(header.get("loss", float("nan"))),
+            "modelled_s": float(header.get("modelled_s", 0.0)),
+            "measured_s": float(header.get("measured_s", 0.0)),
+            "leaves": leaves,
+        }
+        with self.cond:
+            if self.mode == "sync":
+                rnd = int(header["round"])
+                if rnd != self.round:
+                    return protocol.build_err(
+                        f"update for round {rnd} but coordinator is at "
+                        f"round {self.round}")
+                self.updates[rec["client_id"]] = rec
+                self._maybe_aggregate_sync()
+            else:
+                rec["version"] = int(header["version"])
+                self.buffer.append(rec)
+                self._maybe_aggregate_async()
+            return protocol.build_ok({"round": self.round,
+                                      "version": self.version,
+                                      "done": self.done})
+
+    def _op_stats(self) -> bytes:
+        with self.cond:
+            return protocol.build_ok({
+                "mode": self.mode, "round": self.round,
+                "version": self.version, "done": self.done,
+                "workers": {w: sorted(c) for w, c in self.workers.items()},
+                "accs": list(self.acc_history),
+                "cum_modelled_s": self.cum_modelled_s,
+                "wall_s": self._wall(),
+                "history": [{k: v for k, v in h.items()}
+                            for h in self.history],
+            })
+
+
+# -- service plumbing (mirrors launch/embed_server) ---------------------------
+
+class CoordinatorHandle:
+    """A running coordinator: address for workers, ``stop()``/``join()``
+    for teardown, ``state`` for in-process inspection."""
+
+    def __init__(self, state: CoordinatorState, sock: socket.socket,
+                 thread: threading.Thread):
+        self.state = state
+        self._sock = sock
+        self._thread = thread
+        self.host, self.port = sock.getsockname()[:2]
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return (self.host, self.port)
+
+    def join(self, timeout: float = 60.0) -> bool:
+        """Wait until training is done (all rounds aggregated)."""
+        deadline = time.monotonic() + timeout
+        with self.state.cond:
+            while not self.state.done and not self.state.stop.is_set():
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+                self.state.cond.wait(timeout=min(0.2, left))
+        return self.state.done
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self.state.stop.set()
+        with self.state.cond:
+            self.state.cond.notify_all()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._thread.join(timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+
+
+def _client_loop(conn: socket.socket, conn_id: int,
+                 state: CoordinatorState) -> None:
+    try:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        while not state.stop.is_set():
+            body = wire.recv_frame(conn)
+            if body is None:
+                break
+            wire.send_frame(conn, state.handle(conn_id, body))
+    except (ConnectionError, OSError):
+        pass
+    finally:
+        state.disconnect(conn_id)
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+
+def _accept_loop(listener: socket.socket, state: CoordinatorState) -> None:
+    listener.settimeout(0.2)
+    threads: list[threading.Thread] = []
+    conn_id = 0
+    while not state.stop.is_set():
+        try:
+            conn, _ = listener.accept()
+        except socket.timeout:
+            continue
+        except OSError:
+            break
+        conn_id += 1
+        t = threading.Thread(target=_client_loop,
+                             args=(conn, conn_id, state), daemon=True)
+        t.start()
+        threads.append(t)
+    try:
+        listener.close()
+    except OSError:
+        pass
+    for t in threads:
+        t.join(0.5)
+
+
+def serve_in_thread(state: CoordinatorState, *, host: str = "127.0.0.1",
+                    port: int = 0) -> CoordinatorHandle:
+    """Start the coordinator on a background thread (ephemeral port by
+    default) and return its handle."""
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    listener.bind((host, port))
+    listener.listen(64)
+    thread = threading.Thread(target=_accept_loop, args=(listener, state),
+                              daemon=True)
+    thread.start()
+    return CoordinatorHandle(state, listener, thread)

@@ -1,0 +1,149 @@
+"""RunConfig: one declarative description of a federated deployment.
+
+Every participant of a control-plane run — the coordinator CLI, each
+worker CLI, tests, benchmarks — must construct *the same* graph,
+partition, shards, samplers, and model init, or the distributed round
+diverges from the in-process simulator.  RunConfig captures everything
+those constructions depend on and rebuilds them deterministically
+(synthetic graphs are generated from ``(preset, scale, graph_seed)``;
+partitions/samplers/model init from ``seed``), so a JSON blob or an
+argv vector fully pins a deployment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.core import FederatedGNNTrainer, Strategy, default_strategies
+
+
+@dataclasses.dataclass
+class RunConfig:
+    graph: str = "reddit"
+    scale: float = 0.05
+    graph_seed: int = 3
+    num_clients: int = 2
+    strategy: str = "E"
+    # Strategy field overrides (codec, delta_threshold, aggregation,
+    # buffer_size, error_feedback, ...) applied via dataclasses.replace
+    overrides: dict = dataclasses.field(default_factory=dict)
+    conv: str = "graphconv"
+    num_layers: int = 3
+    hidden: int = 32
+    fanout: int = 5
+    batch_size: int = 64
+    epochs_per_round: int = 3
+    lr: float = 1e-2
+    seed: int = 0
+    rounds: int = 2
+    embed_addrs: list = dataclasses.field(default_factory=list)
+
+    # -- construction ------------------------------------------------------
+
+    def build_strategy(self) -> Strategy:
+        base = default_strategies()[self.strategy]
+        over = dict(self.overrides)
+        if self.embed_addrs and "transport" not in over:
+            over["transport"] = "tcp"
+        return dataclasses.replace(base, **over) if over else base
+
+    def build_graph(self):
+        from repro.graphs import make_graph
+        return make_graph(self.graph, scale=self.scale,
+                          seed=self.graph_seed)
+
+    def build_trainer(self, *, embeddings: Optional[bool] = None
+                      ) -> FederatedGNNTrainer:
+        """The full trainer a worker runs ``client_round`` on.  Pass
+        ``embeddings=False`` for a participant that only needs model
+        init + evaluation (the coordinator) — it skips the exchange and
+        never touches the embed shards, while partition/model init stay
+        identical."""
+        st = self.build_strategy()
+        if embeddings is False:
+            st = dataclasses.replace(st, use_embeddings=False,
+                                     transport="auto")
+        addrs = self.embed_addrs or None
+        if not st.use_embeddings or st.transport != "tcp":
+            addrs = None
+        return FederatedGNNTrainer(
+            self.build_graph(), self.num_clients, st,
+            conv=self.conv, num_layers=self.num_layers,
+            hidden=self.hidden, fanout=self.fanout,
+            batch_size=self.batch_size,
+            epochs_per_round=self.epochs_per_round, lr=self.lr,
+            transport_addrs=addrs, seed=self.seed)
+
+    # -- (de)serialisation -------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "RunConfig":
+        return cls(**json.loads(blob))
+
+    # -- argparse plumbing (shared by both CLIs) ---------------------------
+
+    @staticmethod
+    def add_args(ap) -> None:
+        ap.add_argument("--graph", default="reddit")
+        ap.add_argument("--scale", type=float, default=0.05)
+        ap.add_argument("--graph-seed", type=int, default=3)
+        ap.add_argument("--clients", type=int, default=2,
+                        help="total number of federated clients K")
+        ap.add_argument("--strategy", default="E",
+                        help="strategy name from default_strategies()")
+        ap.add_argument("--set", action="append", default=[],
+                        metavar="FIELD=VALUE", dest="overrides",
+                        help="Strategy field override, JSON-valued "
+                             "(e.g. --set codec='\"int8\"' "
+                             "--set delta_threshold=0.05); bare strings "
+                             "also accepted (--set codec=int8)")
+        ap.add_argument("--conv", default="graphconv")
+        ap.add_argument("--num-layers", type=int, default=3)
+        ap.add_argument("--hidden", type=int, default=32)
+        ap.add_argument("--fanout", type=int, default=5)
+        ap.add_argument("--batch-size", type=int, default=64)
+        ap.add_argument("--epochs", type=int, default=3)
+        ap.add_argument("--lr", type=float, default=1e-2)
+        ap.add_argument("--seed", type=int, default=0)
+        ap.add_argument("--rounds", type=int, default=2)
+        ap.add_argument("--embed", action="append", default=[],
+                        metavar="HOST:PORT", dest="embed_addrs",
+                        help="embed_server shard address (repeatable)")
+
+    @classmethod
+    def from_args(cls, args) -> "RunConfig":
+        overrides = {}
+        for item in args.overrides:
+            key, _, val = item.partition("=")
+            try:
+                overrides[key] = json.loads(val)
+            except json.JSONDecodeError:
+                overrides[key] = val          # bare string convenience
+        return cls(graph=args.graph, scale=args.scale,
+                   graph_seed=args.graph_seed, num_clients=args.clients,
+                   strategy=args.strategy, overrides=overrides,
+                   conv=args.conv, num_layers=args.num_layers,
+                   hidden=args.hidden, fanout=args.fanout,
+                   batch_size=args.batch_size, epochs_per_round=args.epochs,
+                   lr=args.lr, seed=args.seed, rounds=args.rounds,
+                   embed_addrs=list(args.embed_addrs))
+
+
+class EvalHarness:
+    """The coordinator's model-side hooks: deterministic init leaves and
+    held-out evaluation, built from the same RunConfig as the workers
+    (embeddings off — the coordinator never touches embed shards)."""
+
+    def __init__(self, cfg: RunConfig):
+        self.trainer = cfg.build_trainer(embeddings=False)
+
+    def init_leaves(self):
+        return self.trainer.params_leaves()
+
+    def evaluate_leaves(self, leaves) -> float:
+        return self.trainer.evaluate(self.trainer.leaves_to_params(leaves))

@@ -1,0 +1,221 @@
+"""FedWorker: the client-process side of the control plane.
+
+A worker owns one or more clients of the deployment and runs their
+share of every round through the refactored
+:meth:`repro.core.federated.FederatedGNNTrainer.client_round` —
+sampling, pull/dynamic-pull through ExchangeClient (TcpTransport
+against the embed shards), local epochs, overlap push planning — and
+exchanges *weights* with the coordinator over
+:class:`repro.fedsvc.protocol.CoordinatorClient`.
+
+Sync round protocol (bit-compatible with the in-process simulator)::
+
+    get_model(r)            # blocks until round r open (+ assembly)
+    fill caches (pull)      # the round's only embedding reads
+    pulled(r)               # non-blocking notify
+    client_round(...)       # local epochs; push planned, not applied
+    wait_pulled(r)          # barrier: server static within the round
+    apply push plans        # embedding writes land
+    update(r, params, ...)  # coordinator FedAvgs when all K arrived
+
+Async (FedBuff-style): no barriers — pull, train, push, submit
+``delta = local − base`` tagged with the model version it trained
+from, then immediately fetch the newest model and go again.
+
+Scenario injection (:class:`WorkerScenario`): a pacing multiplier and a
+fixed straggler delay stretch this worker's round both in *measured*
+wall-clock (real sleeps) and in the *modelled* ledger (the same
+multiplier applied to the NetworkModel-based ``client_time``), so the
+two ledgers stay comparable — the TcpTransport discipline.  A dropout
+probability makes the worker die mid-round (after the pull barrier,
+before its update), which exercises the coordinator's deregistration
+path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import FederatedGNNTrainer
+
+from .protocol import CoordinatorClient
+from .runtime import RunConfig
+
+
+@dataclasses.dataclass
+class WorkerScenario:
+    """Injected heterogeneity for one worker."""
+    pacing: float = 1.0         # >1: this worker is uniformly slower
+    straggler_s: float = 0.0    # fixed extra seconds per round
+    dropout_prob: float = 0.0   # per-round chance of dying mid-round
+    seed: int = 0
+
+    def round_delay(self, measured_train_s: float) -> float:
+        return max(0.0, (self.pacing - 1.0) * measured_train_s) \
+            + self.straggler_s
+
+
+class WorkerDropout(Exception):
+    """Raised internally when the scenario kills the worker mid-round."""
+
+
+class FedWorker:
+    def __init__(self, cfg: RunConfig, client_ids: list[int],
+                 coordinator_addr, *, worker_id: str | None = None,
+                 scenario: WorkerScenario | None = None,
+                 trainer: FederatedGNNTrainer | None = None):
+        self.cfg = cfg
+        self.client_ids = sorted(int(c) for c in client_ids)
+        self.addr = coordinator_addr
+        self.worker_id = worker_id or \
+            "worker-" + "-".join(str(c) for c in self.client_ids)
+        self.scenario = scenario or WorkerScenario()
+        self._rng = np.random.default_rng(self.scenario.seed)
+        self.trainer = trainer if trainer is not None else cfg.build_trainer()
+        self.records: list[dict] = []     # one per completed local round
+        self.dropped = False              # scenario killed this worker
+        self.disconnected = False         # coordinator went away mid-run
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def run(self) -> list[dict]:
+        """Train until the coordinator reports done (or the scenario
+        kills this worker).  Returns the per-round records."""
+        tr = self.trainer
+        # §3.2.1 pretrain: seed the embed shards with this worker's
+        # rows *before* registering — the coordinator's assembly gate
+        # guarantees nobody pulls until every worker got here.
+        tr.pretrain_round(self.client_ids)
+        client = CoordinatorClient(self.addr)
+        try:
+            hello = client.hello(self.worker_id, self.client_ids,
+                                 init_leaves=tr.params_leaves())
+            if hello["mode"] == "sync":
+                self._run_sync(client, start_round=int(hello["round"]))
+            else:
+                self._run_async(client)
+        except WorkerDropout:
+            self.dropped = True
+        except (ConnectionError, OSError):
+            # the coordinator stopped (timeout, lingered out, or died)
+            # mid-RPC: end gracefully, keeping the completed records
+            self.disconnected = True
+        finally:
+            client.close()
+        return self.records
+
+    def _maybe_drop(self) -> None:
+        if self.scenario.dropout_prob > 0 \
+                and self._rng.random() < self.scenario.dropout_prob:
+            raise WorkerDropout(self.worker_id)
+
+    # -- sync --------------------------------------------------------------
+
+    def _run_sync(self, client: CoordinatorClient, start_round: int) -> None:
+        tr = self.trainer
+        r = start_round
+        while True:
+            head, leaves = client.get_model(r)
+            if head["done"]:
+                return
+            r = int(head["round"])
+            t_start = time.perf_counter()
+            params = tr.leaves_to_params(leaves)
+            tr.set_round_tau(r, head.get("accs", ()))
+            for ci in self.client_ids:
+                tr._fill_cache(ci)
+            client.pulled(r, self.client_ids)
+            # dropout lands after the pull barrier contribution and
+            # before any update — the nastiest spot for the coordinator
+            self._maybe_drop()
+            results = [tr.client_round(ci, params, fill_cache=False)
+                       for ci in self.client_ids]
+            t_train = time.perf_counter() - t_start
+            delay = self.scenario.round_delay(t_train)
+            if delay > 0:
+                time.sleep(delay)
+            client.wait_pulled(r)
+            for res in results:
+                if res.push_plan is not None:
+                    tr.ex_clients[res.client_id].apply_push(res.push_plan)
+            measured = time.perf_counter() - t_start
+            for res in results:
+                client.update(
+                    {"round": r, "client_id": res.client_id,
+                     "weight": res.weight, "loss": res.loss,
+                     "modelled_s": res.client_time * self.scenario.pacing
+                     + self.scenario.straggler_s,
+                     "measured_s": measured},
+                    tr.params_leaves(res.params))
+            self.records.append({
+                "round": r, "clients": self.client_ids,
+                "measured_s": measured,
+                "modelled_s": max(res.client_time for res in results)
+                * self.scenario.pacing + self.scenario.straggler_s,
+                "losses": [res.loss for res in results]})
+            r += 1
+
+    # -- async -------------------------------------------------------------
+
+    def _run_async(self, client: CoordinatorClient) -> None:
+        tr = self.trainer
+        it = 0
+        while True:
+            head, leaves = client.get_model(0)
+            if head["done"]:
+                return
+            version = int(head["version"])
+            base = leaves
+            params = tr.leaves_to_params(leaves)
+            tr.set_round_tau(it, head.get("accs", ()))
+            self._maybe_drop()
+            head = {}
+            for ci in self.client_ids:
+                # delay baseline is per client: each client's update is
+                # its own async round, and pacing must not compound over
+                # earlier clients' train time + injected sleeps
+                t_client = time.perf_counter()
+                res = tr.client_round(ci, params)
+                # no barrier by design: async trades the static-server
+                # invariant for wall-clock, so the push lands at once
+                if res.push_plan is not None:
+                    tr.ex_clients[ci].apply_push(res.push_plan)
+                delay = self.scenario.round_delay(
+                    time.perf_counter() - t_client)
+                if delay > 0:
+                    time.sleep(delay)
+                measured = time.perf_counter() - t_client
+                delta = [np.asarray(l) - np.asarray(b) for l, b in
+                         zip(tr.params_leaves(res.params), base)]
+                head = client.update(
+                    {"version": version, "client_id": res.client_id,
+                     "weight": res.weight, "loss": res.loss,
+                     "modelled_s": res.client_time * self.scenario.pacing
+                     + self.scenario.straggler_s,
+                     "measured_s": measured},
+                    delta)
+                self.records.append({
+                    "iteration": it, "client": ci, "version": version,
+                    "measured_s": measured,
+                    "modelled_s": res.client_time * self.scenario.pacing
+                    + self.scenario.straggler_s,
+                    "losses": [res.loss]})
+            if head.get("done"):
+                return
+            it += 1
+
+
+def run_in_thread(worker: FedWorker) -> threading.Thread:
+    """Start ``worker.run()`` on a daemon thread (tests/benchmarks run
+    several workers inside one process; each owns its own trainer, and
+    they share state only through the coordinator + embed shards — the
+    same isolation real processes have)."""
+    t = threading.Thread(target=worker.run, name=worker.worker_id,
+                         daemon=True)
+    t.start()
+    return t

@@ -1,0 +1,83 @@
+"""CLI: the weight-aggregation coordinator service.
+
+One coordinator per deployment.  It never touches the embed shards —
+it holds the global model, gates the sync barriers (or drains the
+async buffer), FedAvg-aggregates, and evaluates on the held-out test
+set, exactly like the aggregation server of the in-process simulator.
+
+    python -m repro.launch.fed_coordinator --port 7050 \
+        --graph reddit --scale 0.05 --graph-seed 3 --clients 2 \
+        --strategy E --rounds 2
+
+then point workers (repro.launch.fed_worker) at host:7050.  Sync/async
+and the FedBuff knobs come from the strategy:
+``--set aggregation='"async"' --set buffer_size=2
+--set staleness_decay=0.5``.
+
+The process exits once all rounds aggregated (plus a short linger so
+workers can observe the done flag), printing one JSON line per
+aggregation: round, accuracy, modelled round time, measured wall
+clock.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.fedsvc.coordinator import CoordinatorState, serve_in_thread
+from repro.fedsvc.runtime import EvalHarness, RunConfig
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Federated weight-aggregation coordinator "
+                    "(repro.fedsvc protocol)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7050)
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="give up if training has not finished by then")
+    ap.add_argument("--linger", type=float, default=3.0,
+                    help="seconds to keep serving after done, so every "
+                         "worker observes the done flag")
+    ap.add_argument("--out", default=None,
+                    help="write the aggregation history as JSON here")
+    RunConfig.add_args(ap)
+    args = ap.parse_args(argv)
+
+    cfg = RunConfig.from_args(args)
+    strategy = cfg.build_strategy()
+    harness = EvalHarness(cfg)
+    state = CoordinatorState(
+        num_clients=cfg.num_clients, num_rounds=cfg.rounds,
+        mode=strategy.aggregation, buffer_size=strategy.buffer_size,
+        staleness_decay=strategy.staleness_decay,
+        init_leaves=harness.init_leaves(),
+        eval_fn=harness.evaluate_leaves)
+    handle = serve_in_thread(state, host=args.host, port=args.port)
+    print(f"fed_coordinator listening on {handle.host}:{handle.port} "
+          f"(mode={strategy.aggregation}, clients={cfg.num_clients}, "
+          f"rounds={cfg.rounds})", flush=True)
+    try:
+        finished = handle.join(timeout=args.timeout)
+        with state.cond:
+            history = list(state.history)
+        for h in history:
+            print(json.dumps(h), flush=True)
+        if args.out:
+            out = pathlib.Path(args.out)
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_text(json.dumps(history, indent=1))
+        print("fed_coordinator " + ("DONE" if finished else "TIMEOUT"),
+              flush=True)
+        time.sleep(args.linger)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        handle.stop()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""CLI: one federated client-worker process.
+
+Owns one or more clients of the deployment, rebuilds the identical
+graph/partition/model from the shared RunConfig flags, trains its
+clients' share of every round through
+``FederatedGNNTrainer.client_round``, exchanges embeddings with the
+embed shards (``--embed``, repeatable) and weights with the coordinator
+(``--coordinator``).
+
+    python -m repro.launch.fed_worker --coordinator 127.0.0.1:7050 \
+        --client-ids 0 --graph reddit --scale 0.05 --graph-seed 3 \
+        --clients 2 --strategy E --rounds 2 \
+        --embed 127.0.0.1:7040 --embed 127.0.0.1:7041
+
+Scenario injection: ``--pacing 2.0`` makes this worker a uniform 2×
+straggler, ``--straggler-s`` adds a fixed per-round delay, and
+``--dropout-prob`` gives it a per-round chance of dying mid-round —
+all three are reflected in both the measured wall clock (real sleeps)
+and the modelled round-time ledger it reports to the coordinator.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.fedsvc.runtime import RunConfig
+from repro.fedsvc.worker import FedWorker, WorkerScenario
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Federated client worker (repro.fedsvc protocol)")
+    ap.add_argument("--coordinator", required=True, metavar="HOST:PORT")
+    ap.add_argument("--client-ids", required=True,
+                    help="comma-separated client indices this worker owns")
+    ap.add_argument("--worker-id", default=None)
+    ap.add_argument("--pacing", type=float, default=1.0)
+    ap.add_argument("--straggler-s", type=float, default=0.0)
+    ap.add_argument("--dropout-prob", type=float, default=0.0)
+    ap.add_argument("--scenario-seed", type=int, default=0)
+    RunConfig.add_args(ap)
+    args = ap.parse_args(argv)
+
+    cfg = RunConfig.from_args(args)
+    client_ids = [int(c) for c in args.client_ids.split(",") if c != ""]
+    scenario = WorkerScenario(pacing=args.pacing,
+                              straggler_s=args.straggler_s,
+                              dropout_prob=args.dropout_prob,
+                              seed=args.scenario_seed)
+    worker = FedWorker(cfg, client_ids, args.coordinator,
+                       worker_id=args.worker_id, scenario=scenario)
+    print(f"fed_worker {worker.worker_id} clients={client_ids} "
+          f"coordinator={args.coordinator}", flush=True)
+    records = worker.run()
+    for rec in records:
+        print(json.dumps(rec), flush=True)
+    status = "DROPPED" if worker.dropped else \
+        "DISCONNECTED" if worker.disconnected else "DONE"
+    print(f"fed_worker {worker.worker_id} {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,11 @@ import pytest
 from repro.graphs import bfs_partition, make_client_shards, make_graph
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-process end-to-end control-plane runs")
+
+
 @pytest.fixture(scope="session")
 def small_graph():
     return make_graph("arxiv", scale=0.15, seed=7)
