@@ -1,33 +1,43 @@
-"""Control-plane benchmark: sync vs async aggregation under stragglers.
+"""Control-plane benchmark: aggregation policy and weight-wire codec.
 
-The experiment the sequential simulator cannot express (OptimES §4.2
-models overlap *within* a client; this measures overlap *across*
-clients): a real coordinator + worker deployment over loopback TCP —
-live embed shards, live weight exchange — with one worker paced as a
-``STRAGGLE``× straggler.  Synchronous FedAvg pays the straggler every
-round (the barrier waits); FedBuff-style async aggregation
-(Strategy.buffer_size / staleness_decay) lets the fast worker keep
-contributing updates, so wall-clock time-to-accuracy should drop.
+Two experiments the sequential simulator cannot express, both run as a
+real coordinator + worker deployment over loopback TCP (live embed
+shards, live weight exchange):
 
-Both ledgers are reported per mode, same discipline as TcpTransport:
+1. **sync vs async under a straggler** (OptimES §4.2 models overlap
+   *within* a client; this measures overlap *across* clients): one
+   worker paced as a ``STRAGGLE``× straggler.  Synchronous FedAvg pays
+   the straggler every round; FedBuff-style async aggregation
+   (Strategy.buffer_size / staleness_decay) lets the fast worker keep
+   contributing, so wall-clock time-to-accuracy drops.
+
+2. **raw vs compressed weight wire**: the same sync deployment with
+   ``Strategy.weight_codec="int8"`` (codec-encoded model deltas with
+   error feedback, version-diff downloads) against the raw fp32
+   baseline.  Reported per run: actual weight-plane payload bytes per
+   round (both directions, from the coordinator's wire ledger) and the
+   codec-aware modelled exchange time, next to peak accuracy — the
+   acceptance target is fp32-peak accuracy within 0.5 pp at ≥3× fewer
+   weight bytes per round.
+
+Both ledgers are reported per run, same discipline as TcpTransport:
 ``measured`` is real wall clock from first registration (includes the
 injected sleeps), ``modelled`` is the NetworkModel-based round time the
 workers report (pacing-scaled ``client_total`` + modelled model
-exchange).
+exchange priced at the bytes actually framed).
 
 CSV rows: ``name,us_per_call,derived`` where us_per_call is the median
 measured aggregation-to-aggregation time and ``derived`` carries
-time-to-accuracy at the shared target plus final/peak accuracy.
+time-to-accuracy at the shared target plus final/peak accuracy and, for
+the weight-wire sweep, bytes-per-round on the weight plane.
 """
 
 from __future__ import annotations
 
-import sys
-
 import numpy as np
 
-from repro.fedsvc.coordinator import CoordinatorState, serve_in_thread
-from repro.fedsvc.runtime import EvalHarness, RunConfig
+from repro.fedsvc.coordinator import serve_in_thread
+from repro.fedsvc.runtime import RunConfig, make_coordinator_state
 from repro.fedsvc.worker import FedWorker, WorkerScenario, run_in_thread
 from repro.launch.embed_server import serve_in_thread as embed_serve
 
@@ -36,28 +46,21 @@ from .common import emit, quick_mode
 STRAGGLE = 2.5          # the slow worker's pacing multiplier (>= 2x)
 
 
-def run_mode(mode: str, *, rounds: int, cfg_kw: dict,
-             buffer_size: int = 2, staleness_decay: float = 0.5) -> dict:
+def run_deployment(*, rounds: int, cfg_kw: dict, overrides: dict,
+                   scenarios: dict[int, WorkerScenario] | None = None
+                   ) -> dict:
     shards = [embed_serve(cfg_kw["num_layers"], cfg_kw["hidden"])
               for _ in range(2)]
-    overrides = {"aggregation": mode, "buffer_size": buffer_size,
-                 "staleness_decay": staleness_decay}
     cfg = RunConfig(strategy="E", num_clients=2, rounds=rounds,
                     overrides=overrides,
                     embed_addrs=[f"{h.host}:{h.port}" for h in shards],
                     **cfg_kw)
-    harness = EvalHarness(cfg)
-    state = CoordinatorState(
-        num_clients=2, num_rounds=rounds, mode=mode,
-        buffer_size=buffer_size, staleness_decay=staleness_decay,
-        init_leaves=harness.init_leaves(),
-        eval_fn=harness.evaluate_leaves)
+    state = make_coordinator_state(cfg)
     coord = serve_in_thread(state)
-    workers = [
-        FedWorker(cfg, [0], coord.address, worker_id="fast"),
-        FedWorker(cfg, [1], coord.address, worker_id="slow",
-                  scenario=WorkerScenario(pacing=STRAGGLE, seed=1)),
-    ]
+    scenarios = scenarios or {}
+    workers = [FedWorker(cfg, [i], coord.address, worker_id=f"w{i}",
+                         scenario=scenarios.get(i))
+               for i in range(2)]
     threads = [run_in_thread(w) for w in workers]
     finished = coord.join(timeout=1200)
     for t in threads:
@@ -68,12 +71,14 @@ def run_mode(mode: str, *, rounds: int, cfg_kw: dict,
     for h in shards:
         h.stop()
     if not finished or not history:
-        raise RuntimeError(f"{mode} run did not finish "
+        raise RuntimeError(f"{overrides} run did not finish "
                            f"({len(history)} aggregations)")
     return {"history": history,
             "accs": [h["accuracy"] for h in history],
             "wall": [h["wall_s"] for h in history],
-            "modelled": [h["cum_modelled_s"] for h in history]}
+            "modelled": [h["cum_modelled_s"] for h in history],
+            "weight_bytes": [h["weight_bytes"] for h in history],
+            "weight_modelled": [h["weight_modelled_s"] for h in history]}
 
 
 def tta(res: dict, target: float, key: str) -> float:
@@ -88,10 +93,19 @@ def main() -> None:
     cfg_kw = dict(graph="reddit", scale=0.05, graph_seed=3,
                   num_layers=3, hidden=32, batch_size=64,
                   epochs_per_round=3, seed=0)
+
+    # -- 1. sync vs async under a straggler -------------------------------
     # async gets the same *update budget*: `rounds` sync rounds consume
     # 2*rounds client updates = rounds buffer drains at buffer_size=2.
-    sync = run_mode("sync", rounds=rounds, cfg_kw=cfg_kw)
-    asyn = run_mode("async", rounds=rounds, cfg_kw=cfg_kw)
+    straggle = {1: WorkerScenario(pacing=STRAGGLE, seed=1)}
+    sync = run_deployment(rounds=rounds, cfg_kw=cfg_kw,
+                          overrides={"aggregation": "sync"},
+                          scenarios=straggle)
+    asyn = run_deployment(rounds=rounds, cfg_kw=cfg_kw,
+                          overrides={"aggregation": "async",
+                                     "buffer_size": 2,
+                                     "staleness_decay": 0.5},
+                          scenarios=straggle)
 
     # shared target: reachable by both modes (async pays staleness a
     # bit of accuracy; the win it buys is wall clock)
@@ -109,6 +123,34 @@ def main() -> None:
     speedup = tta(sync, target, "wall") / tta(asyn, target, "wall")
     print(f"# async speedup at target: {speedup:.2f}x "
           f"(straggler {STRAGGLE:g}x, buffer_size=2)", flush=True)
+
+    # -- 2. raw vs int8+EF weight wire ------------------------------------
+    # `sync` above IS the raw fp32 baseline (weight_codec=None); run the
+    # same deployment with the codec-compressed weight plane.  Steady
+    # state (round ≥ 1: first downloads are full models by design) is
+    # the fair bytes-per-round comparison.
+    comp = run_deployment(rounds=rounds, cfg_kw=cfg_kw,
+                          overrides={"aggregation": "sync",
+                                     "weight_codec": "int8",
+                                     "weight_error_feedback": True},
+                          scenarios=straggle)
+    for name, res in (("weight-fp32-raw", sync), ("weight-int8+ef", comp)):
+        steady = res["weight_bytes"][1:] or res["weight_bytes"]
+        steady_t = res["weight_modelled"][1:] or res["weight_modelled"]
+        gaps = np.diff([0.0] + res["wall"])
+        emit(name,
+             {"median_round_s": float(np.median(gaps))},
+             f"weight_kB_round={float(np.mean(steady)) / 1e3:.1f} "
+             f"weight_modelled_s_round={float(np.mean(steady_t)):.5f} "
+             f"wall_s={res['wall'][-1]:.2f} "
+             f"modelled_s={res['modelled'][-1]:.2f} "
+             f"peak={max(res['accs']):.4f} final={res['accs'][-1]:.4f}")
+    raw_b = float(np.mean(sync["weight_bytes"][1:] or sync["weight_bytes"]))
+    cmp_b = float(np.mean(comp["weight_bytes"][1:] or comp["weight_bytes"]))
+    dpp = (max(sync["accs"]) - max(comp["accs"])) * 100
+    print(f"# weight wire int8+EF: {raw_b / cmp_b:.2f}x fewer bytes/round "
+          f"({raw_b / 1e3:.1f} -> {cmp_b / 1e3:.1f} kB), "
+          f"peak acc delta {dpp:+.2f} pp vs fp32 raw", flush=True)
 
 
 if __name__ == "__main__":

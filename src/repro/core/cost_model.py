@@ -49,9 +49,18 @@ class NetworkModel:
         return wire + n_rpcs * self.rpc_overhead_s \
             + n_embeddings * layers * self.per_embedding_overhead_s
 
-    def model_transfer_time(self, n_params: int) -> float:
-        """Client↔aggregation-server model exchange (one direction)."""
-        return n_params * self.bytes_per_scalar / self.bandwidth_bytes_per_s \
+    def model_transfer_time(self, n_params: int, *,
+                            bytes_per_scalar: float | None = None) -> float:
+        """Client↔aggregation-server model exchange (one direction).
+
+        ``bytes_per_scalar`` makes the weight wire codec-aware, same as
+        :meth:`embedding_bytes`: the coordinator passes the *effective*
+        bytes/param of what it actually framed (int8 deltas ≈ 1 B/param
+        + per-leaf scales), so the modelled ledger tracks the measured
+        one across weight codecs; default is the raw fp32 value."""
+        bps = self.bytes_per_scalar if bytes_per_scalar is None \
+            else bytes_per_scalar
+        return n_params * bps / self.bandwidth_bytes_per_s \
             + self.rpc_overhead_s
 
 

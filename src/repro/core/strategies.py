@@ -63,6 +63,23 @@ class Strategy:
     aggregation: str = "sync"
     buffer_size: int = 2
     staleness_decay: float = 0.5
+    # -- weight-wire compression (coordinator ↔ worker model exchange) ------
+    # None — raw fp32 full leaves both directions (bit-compatible with
+    # the in-process trainer).  "fp32" | "fp16" | "int8" — the exchange
+    # codec stack applied to the *weight* plane: worker→coordinator
+    # updates ship codec-encoded deltas (local − base) with per-client
+    # error-feedback residual carry, and coordinator→worker get_model
+    # serves version-diff deltas against the worker's last-served view
+    # (full model only on first fetch / re-join).
+    weight_codec: Optional[str] = None
+    weight_error_feedback: bool = True     # EF on the weight deltas
+    # -- coordinator-driven client sampling (sync rounds) -------------------
+    # FedBuff-style per-round participation: each sync round the
+    # coordinator samples ceil(sample_frac·K) clients (min 1) and the
+    # pull barrier + FedAvg trigger consider only the sampled subset;
+    # unsampled workers skip straight to the next round's get_model.
+    # None — every client participates every round (historical).
+    sample_frac: Optional[float] = None
 
     def delta_for_round(self, round_idx: int,
                         accuracies: Sequence[float] = ()) -> Optional[float]:
@@ -103,6 +120,11 @@ class Strategy:
             bits.append(f"agg={self.aggregation}"
                         f"(m={self.buffer_size},"
                         f"decay={self.staleness_decay:g})")
+        if self.weight_codec is not None:
+            ef = "+ef" if self.weight_error_feedback else ""
+            bits.append(f"wcodec={self.weight_codec}{ef}")
+        if self.sample_frac is not None:
+            bits.append(f"sample={self.sample_frac:g}")
         if self.num_server_shards > 1:
             bits.append(f"shards={self.num_server_shards}")
         if self.transport != "auto":

@@ -38,9 +38,10 @@ sweeps the cross-product against the fp32 full-push baseline.
 """
 
 from .codec import (Fp16Codec, Fp32Codec, Int8Codec, WireCodec,
-                    available_codecs, get_codec)
+                    available_codecs, decode_leaves, encode_leaves,
+                    get_codec)
 from .client import ExchangeClient, PushPlan
-from .delta import DeltaTracker, ErrorFeedback
+from .delta import DeltaTracker, ErrorFeedback, LeafErrorFeedback
 from .transport import (InProcessTransport, ShardedTransport, Transport,
                         make_transport)
 
@@ -50,7 +51,8 @@ _SOCKET_EXPORTS = ("TcpTransport", "RpcSample", "parse_address")
 
 __all__ = [
     "WireCodec", "Fp32Codec", "Fp16Codec", "Int8Codec", "get_codec",
-    "available_codecs", "DeltaTracker", "ErrorFeedback", "Transport",
+    "available_codecs", "encode_leaves", "decode_leaves",
+    "DeltaTracker", "ErrorFeedback", "LeafErrorFeedback", "Transport",
     "InProcessTransport",
     "ShardedTransport", "TcpTransport", "RpcSample", "parse_address",
     "make_transport", "ExchangeClient", "PushPlan",

@@ -27,6 +27,7 @@ class WireCodec(abc.ABC):
     """Encode/decode one (n, hidden) fp32 layer block for the wire."""
 
     name: str = "?"
+    wire_arrays: int = 1       # arrays per encoded block (int8: values+scales)
 
     @abc.abstractmethod
     def encode(self, x: np.ndarray):
@@ -88,6 +89,7 @@ class Int8Codec(WireCodec):
     the measured hot loop on TPU and the jnp oracle elsewhere."""
 
     name = "int8"
+    wire_arrays = 2
 
     def __init__(self, use_pallas="auto"):
         self.use_pallas = use_pallas
@@ -130,3 +132,55 @@ def get_codec(name: str | WireCodec) -> WireCodec:
         raise ValueError(
             f"unknown codec {name!r}; available: {available_codecs()}"
         ) from None
+
+
+# -- leaf-pytree form (the weight wire) ---------------------------------------
+#
+# The row-oriented codecs above operate on (n, hidden) embedding blocks.
+# The federated *weight* plane moves flat leaf lists (a params pytree's
+# tree_flatten order) whose shapes vary per leaf, so each leaf is
+# flattened to a single (1, size) row and run through the same codec —
+# for int8 that makes the quantization grain one scale per leaf, the
+# natural model-delta analogue of per-row embedding scales.  Encoding
+# yields plain numpy arrays that ride the control plane's
+# ``wire.build_tensors`` framing, so an int8-encoded leaf really costs
+# 1 B/scalar on the socket, not just in the modelled ledger.
+
+def encode_leaves(codec: str | WireCodec, leaves) -> tuple[list, list]:
+    """fp32 leaf list → (wire tensors, shapes).
+
+    ``shapes`` must travel alongside the tensors (the JSON header of a
+    control-plane RPC) so :func:`decode_leaves` can restore the leaf
+    shapes; the tensor list holds ``codec.wire_arrays`` arrays per leaf
+    in leaf order."""
+    codec = get_codec(codec)
+    tensors: list[np.ndarray] = []
+    shapes: list[list[int]] = []
+    for leaf in leaves:
+        leaf = np.asarray(leaf, np.float32)
+        shapes.append([int(d) for d in leaf.shape])
+        payload = codec.encode(leaf.reshape(1, -1))
+        if isinstance(payload, tuple):
+            tensors.extend(np.asarray(p) for p in payload)
+        else:
+            tensors.append(np.asarray(payload))
+    return tensors, shapes
+
+
+def decode_leaves(codec: str | WireCodec, tensors, shapes) -> list[np.ndarray]:
+    """Inverse of :func:`encode_leaves`: the fp32 leaves the receiver
+    reconstructs (bit-identical to the sender's local
+    ``codec.roundtrip`` — codecs are deterministic)."""
+    codec = get_codec(codec)
+    per = codec.wire_arrays
+    if len(tensors) != per * len(shapes):
+        raise ValueError(
+            f"{codec.name} leaf payload carries {len(tensors)} arrays "
+            f"for {len(shapes)} leaves (expected {per} per leaf)")
+    out = []
+    for i, shape in enumerate(shapes):
+        block = tensors[per * i: per * (i + 1)]
+        payload = tuple(block) if per > 1 else block[0]
+        out.append(np.asarray(codec.decode(payload), np.float32)
+                   .reshape(shape))
+    return out

@@ -167,3 +167,47 @@ class ErrorFeedback(GidRowTable):
     @property
     def max_abs_residual(self) -> float:
         return float(np.abs(self._live).max()) if len(self._slot) else 0.0
+
+
+class LeafErrorFeedback:
+    """:class:`ErrorFeedback`, leaf-pytree form — the weight wire's EF.
+
+    The embedding plane keys residuals by vertex id; the weight plane's
+    unit of exchange is a whole leaf list (one model delta per client
+    per round), so the residual is simply a parallel list of arrays.
+    Same contract as the row form:
+
+        compensated = delta + residual
+        wire        = encode(compensated)
+        residual'   = compensated − decode(wire)
+
+    so repeated lossy pushes of a converged model stop biasing the
+    aggregate by a persistent quantization step."""
+
+    def __init__(self):
+        self._res: list[np.ndarray] | None = None
+
+    def compensate(self, leaves) -> list[np.ndarray]:
+        """delta leaves + carried residual (zero before the first
+        commit).  Pure read — residuals change only on :meth:`commit`."""
+        if self._res is None:
+            return [np.asarray(l, np.float32) for l in leaves]
+        return [np.asarray(l, np.float32) + r
+                for l, r in zip(leaves, self._res)]
+
+    def commit(self, compensated, decoded) -> None:
+        """Store ``compensated − decoded`` once the push landed."""
+        self._res = [np.asarray(c, np.float32) - np.asarray(d, np.float32)
+                     for c, d in zip(compensated, decoded)]
+
+    def reset(self) -> None:
+        """Drop the carry (worker re-join starts from a fresh model, so
+        the old residual no longer corresponds to anything shipped)."""
+        self._res = None
+
+    @property
+    def max_abs_residual(self) -> float:
+        if not self._res:
+            return 0.0
+        return max(float(np.abs(r).max()) if r.size else 0.0
+                   for r in self._res)

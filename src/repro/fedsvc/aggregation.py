@@ -39,6 +39,28 @@ def fedavg_leaves(leaves_list: Sequence[Sequence[np.ndarray]],
     return out
 
 
+def leaf_sub(a: Sequence[np.ndarray],
+             b: Sequence[np.ndarray]) -> list[np.ndarray]:
+    """Leaf-wise ``a − b`` in float32 — the model delta a worker ships."""
+    assert len(a) == len(b)
+    return [np.asarray(x, np.float32) - np.asarray(y, np.float32)
+            for x, y in zip(a, b)]
+
+
+def leaf_add(base: Sequence[np.ndarray],
+             delta: Sequence[np.ndarray]) -> list[np.ndarray]:
+    """Leaf-wise ``base + delta`` in float32.
+
+    Worker and coordinator both reconstruct a delta-shipped model with
+    this exact function (same float ops, same order), which is what
+    keeps the coordinator's per-worker served view bit-identical to the
+    model the worker actually holds — the invariant the version-diff
+    weight wire rests on."""
+    assert len(base) == len(delta)
+    return [np.asarray(b, np.float32) + np.asarray(d, np.float32)
+            for b, d in zip(base, delta)]
+
+
 def staleness_scale(staleness: int, decay: float) -> float:
     """FedBuff-style staleness discount: ``decay ** staleness``.
 

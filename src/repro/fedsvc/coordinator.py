@@ -8,8 +8,9 @@ the round advances — workers never poll.
 
 Aggregation policies (Strategy.aggregation):
 
-  sync  — barriered FedAvg.  A round aggregates when every *active*
-          client's update arrived, in ascending client-id order through
+  sync  — barriered FedAvg.  A round aggregates when every *sampled,
+          active* client's update arrived, in ascending client-id order
+          through
           :func:`repro.fedsvc.aggregation.fedavg_leaves` — the exact
           function the in-process trainer uses, so a multi-process sync
           round reproduces ``FederatedGNNTrainer.run_round`` numerics.
@@ -20,9 +21,26 @@ Aggregation policies (Strategy.aggregation):
           version bumps.  No barriers: fast workers never wait for
           stragglers, which is the whole point.
 
-Dropout: a worker whose connection dies mid-round is deregistered; the
-pull barrier and the aggregation trigger re-evaluate against the
-surviving client set, so one dead worker cannot wedge the round.
+Dropout and churn: a worker whose connection dies mid-round is
+deregistered; the pull barrier and the aggregation trigger re-evaluate
+against the surviving client set, its not-yet-aggregated updates are
+dropped (an orphaned update must never fold into FedAvg), and a sync
+round only ever aggregates over ``sampled ∩ active ∩ updates``.  A
+re-``hello`` with the same worker id / client ids on a fresh connection
+is a *re-join*: the worker catches up from the current model and its
+clients count again.
+
+Client sampling (Strategy.sample_frac): each sync round the coordinator
+draws ceil(frac·K) clients (deterministically from ``sample_seed`` and
+the round index); only the sampled subset pulls, barriers, and
+aggregates — FedBuff-style partial participation for the sync path.
+
+Weight-wire compression (Strategy.weight_codec): get_model responses
+are codec-encoded version diffs against a per-worker *served view* (the
+exact leaves the worker holds, tracked bit-identically on both ends),
+and updates arrive as codec-encoded deltas the coordinator reconstructs
+against the same view.  Wire bytes both directions are recorded per
+aggregation next to a codec-aware modelled transfer time.
 
 Dual ledgers, same discipline as TcpTransport: every aggregation
 records the *modelled* round time (max over client-reported modelled
@@ -32,6 +50,7 @@ the *measured* wall clock since serving began.
 
 from __future__ import annotations
 
+import math
 import socket
 import threading
 import time
@@ -41,9 +60,11 @@ import numpy as np
 
 from repro.core.cost_model import NetworkModel
 from repro.exchange import wire
+from repro.exchange.codec import decode_leaves, encode_leaves
 
 from . import protocol
-from .aggregation import apply_buffered_deltas, fedavg_leaves, staleness_scale
+from .aggregation import (apply_buffered_deltas, fedavg_leaves, leaf_add,
+                          staleness_scale)
 
 
 class CoordinatorState:
@@ -52,16 +73,24 @@ class CoordinatorState:
     def __init__(self, *, num_clients: int, num_rounds: int,
                  mode: str = "sync", buffer_size: int = 2,
                  staleness_decay: float = 0.5,
+                 weight_codec: Optional[str] = None,
+                 sample_frac: Optional[float] = None,
+                 sample_seed: int = 0,
                  init_leaves: Optional[Sequence[np.ndarray]] = None,
                  eval_fn: Optional[Callable[[list[np.ndarray]], float]] = None,
                  net: NetworkModel | None = None):
         if mode not in ("sync", "async"):
             raise ValueError(f"unknown aggregation mode {mode!r}")
+        if sample_frac is not None and not 0.0 < sample_frac <= 1.0:
+            raise ValueError(f"sample_frac {sample_frac!r} not in (0, 1]")
         self.num_clients = num_clients
         self.num_rounds = num_rounds          # sync: rounds; async: aggs
         self.mode = mode
         self.buffer_size = max(1, buffer_size)
         self.staleness_decay = staleness_decay
+        self.weight_codec = weight_codec
+        self.sample_frac = sample_frac
+        self.sample_seed = sample_seed
         self.eval_fn = eval_fn
         self.net = net or NetworkModel()
 
@@ -72,6 +101,7 @@ class CoordinatorState:
                                               for l in init_leaves]
         self.round = 0                        # sync round index
         self.version = 0                      # async aggregation count
+        self.serial = 0                       # bumps on every aggregation
         self.workers: dict[str, set[int]] = {}          # worker -> clients
         self._conn_worker: dict[int, str] = {}          # conn id -> worker
         self._worker_conn: dict[str, int] = {}          # worker -> live conn
@@ -84,6 +114,16 @@ class CoordinatorState:
         self._t0: Optional[float] = None      # first model served
         self._assembled = False               # all K clients registered
         self._aggregating = False             # async drain in flight
+        # weight codec: per-worker (serial, leaves) of the view that
+        # worker holds — version diffs are computed/reconstructed
+        # against it, and it tracks the worker's copy bit-identically
+        self._served: dict[str, tuple[int, list[np.ndarray]]] = {}
+        self._samples: dict[int, set[int]] = {}         # round -> sampled
+        # weight-plane wire ledger (payload bytes of get_model responses
+        # and update requests), per aggregation and cumulative
+        self.weight_bytes_cum = 0
+        self._dl_bytes = self._ul_bytes = 0             # this aggregation
+        self._dl_max = self._ul_max = 0                 # largest message
 
     # -- helpers (call with self.cond held) --------------------------------
 
@@ -122,34 +162,95 @@ class CoordinatorState:
         if self.stop.is_set() and not predicate():
             raise ConnectionError("coordinator stopping")
 
+    def _sampled(self, rnd: int) -> set[int]:
+        """The client set sync round ``rnd`` runs over (call with cond
+        held).  Drawn lazily from the clients active at draw time —
+        deterministic in (sample_seed, rnd) — and cached so barrier,
+        aggregation, and every worker's get_model agree."""
+        if self.sample_frac is None:
+            return self.active_clients
+        sel = self._samples.get(rnd)
+        if sel is None:
+            pool = sorted(self.active_clients)
+            if not pool:
+                return set()               # nobody yet: don't cache
+            # ceil(frac·K) as documented; the epsilon keeps float noise
+            # (0.2 * 5 == 1.0000000000000002) from bumping a whole client
+            k = max(1, math.ceil(self.sample_frac * self.num_clients
+                                 - 1e-9))
+            rng = np.random.default_rng((self.sample_seed, rnd))
+            sel = set(int(c) for c in
+                      rng.choice(pool, size=min(k, len(pool)),
+                                 replace=False))
+            self._samples[rnd] = sel
+        return sel
+
+    # -- weight-plane wire ledger ------------------------------------------
+
+    def _charge_wire(self, direction: str, nbytes: int) -> None:
+        """Record one weight-plane message (call with cond held)."""
+        if direction == "down":
+            self._dl_bytes += nbytes
+            self._dl_max = max(self._dl_max, nbytes)
+        else:
+            self._ul_bytes += nbytes
+            self._ul_max = max(self._ul_max, nbytes)
+        self.weight_bytes_cum += nbytes
+
+    def _weight_ledger(self) -> dict:
+        """Close out this aggregation's weight-wire ledger: actual bytes
+        both directions plus the codec-aware modelled exchange time (the
+        critical path is one largest download + one largest upload, the
+        per-client exchange of the historical ``2·model_transfer_time``
+        — now priced at the effective bytes/param actually framed)."""
+        n = max(1, self._num_params())
+        modelled = (
+            self.net.model_transfer_time(n, bytes_per_scalar=self._dl_max / n)
+            + self.net.model_transfer_time(n,
+                                           bytes_per_scalar=self._ul_max / n))
+        out = {"weight_down_bytes": self._dl_bytes,
+               "weight_up_bytes": self._ul_bytes,
+               "weight_bytes": self._dl_bytes + self._ul_bytes,
+               "weight_modelled_s": modelled}
+        self._dl_bytes = self._ul_bytes = 0
+        self._dl_max = self._ul_max = 0
+        return out
+
     # -- aggregation -------------------------------------------------------
 
     def _maybe_aggregate_sync(self) -> None:
+        if self.done:
+            return
         active = self.active_clients
-        if self.done or not self.updates:
+        eligible = self._sampled(self.round) & active
+        # aggregate over the surviving sampled set only: an update whose
+        # worker deregistered mid-round is an orphan and must not fold
+        # into FedAvg (the old `active <= updates` check let it through)
+        if not eligible or not eligible <= set(self.updates):
             return
-        if not active or not (active <= set(self.updates)):
-            return
-        ups = [self.updates[cid] for cid in sorted(self.updates)]
+        ups = [self.updates[cid] for cid in sorted(eligible)]
         t0 = time.perf_counter()
         self.leaves = fedavg_leaves([u["leaves"] for u in ups],
                                     [u["weight"] for u in ups])
         acc = self.eval_fn(self.leaves) if self.eval_fn else float("nan")
-        agg_s = time.perf_counter() - t0 \
-            + 2 * self.net.model_transfer_time(self._num_params())
+        ledger = self._weight_ledger()
+        agg_s = time.perf_counter() - t0 + ledger["weight_modelled_s"]
         round_modelled = max(u["modelled_s"] for u in ups) + agg_s
         self.cum_modelled_s += round_modelled
         self.acc_history.append(acc)
         self.history.append({
             "round": self.round, "mode": "sync", "accuracy": acc,
-            "clients": sorted(self.updates),
+            "clients": sorted(eligible),
             "mean_loss": float(np.mean([u["loss"] for u in ups])),
             "round_modelled_s": round_modelled,
             "cum_modelled_s": self.cum_modelled_s,
             "round_measured_s": max(u["measured_s"] for u in ups) + agg_s,
+            "max_barrier_s": max(u.get("barrier_s", 0.0) for u in ups),
             "wall_s": self._wall(),
+            **ledger,
         })
         self.round += 1
+        self.serial += 1
         self.pulled.clear()
         self.updates.clear()
         self.cond.notify_all()
@@ -178,11 +279,12 @@ class CoordinatorState:
                 leaves = apply_buffered_deltas(base, scaled)
                 acc = self.eval_fn(leaves) if self.eval_fn \
                     else float("nan")
-                agg_s = time.perf_counter() - t0 \
-                    + 2 * self.net.model_transfer_time(self._num_params())
+                compute_s = time.perf_counter() - t0
             finally:
                 self.cond.acquire()
                 self._aggregating = False
+            ledger = self._weight_ledger()
+            agg_s = compute_s + ledger["weight_modelled_s"]
             self.leaves = leaves
             # async rounds overlap across workers: the modelled ledger
             # advances by the slowest *buffered* contribution amortized
@@ -203,8 +305,10 @@ class CoordinatorState:
                 "round_measured_s": max(u["measured_s"] for u in ups)
                 + agg_s,
                 "wall_s": self._wall(),
+                **ledger,
             })
             self.version += 1
+            self.serial += 1
             self.cond.notify_all()
 
     # -- connection lifecycle ----------------------------------------------
@@ -220,7 +324,24 @@ class CoordinatorState:
                 return
             self._worker_conn.pop(worker, None)
             self.workers.pop(worker, None)
+            self._served.pop(worker, None)    # re-join gets a full model
             if self.mode == "sync":
+                # orphaned updates: a deregistered client's pending
+                # update must not survive into any aggregation — if all
+                # workers die, stale updates would otherwise wedge the
+                # round (or worse, aggregate the moment one re-joins)
+                active = self.active_clients
+                for cid in [c for c in self.updates if c not in active]:
+                    del self.updates[cid]
+                # a sampled round whose entire sample died can never
+                # complete: skip ahead so survivors re-draw next round
+                while (not self.done and self.sample_frac is not None
+                       and self.active_clients
+                       and not (self._sampled(self.round)
+                                & self.active_clients)):
+                    self.round += 1
+                    self.pulled.clear()
+                    self.updates.clear()
                 self._maybe_aggregate_sync()
             self.cond.notify_all()
 
@@ -237,13 +358,13 @@ class CoordinatorState:
             if op == protocol.OP_HELLO:
                 return self._op_hello(conn_id, header, tensors)
             if op == protocol.OP_GET_MODEL:
-                return self._op_get_model(header)
+                return self._op_get_model(conn_id, header)
             if op == protocol.OP_PULLED:
                 return self._op_pulled(header)
             if op == protocol.OP_WAIT_PULLED:
                 return self._op_wait_pulled(header)
             if op == protocol.OP_UPDATE:
-                return self._op_update(header, tensors)
+                return self._op_update(conn_id, header, tensors)
             if op == protocol.OP_STATS:
                 return self._op_stats()
             if op == protocol.OP_SHUTDOWN:
@@ -265,6 +386,11 @@ class CoordinatorState:
             return protocol.build_err(
                 f"client ids {sorted(bad)} out of range for "
                 f"num_clients={self.num_clients}")
+        if header.get("has_init") and not tensors:
+            # an empty init would seed a zero-parameter model and the
+            # coordinator would happily serve it; refuse loudly instead
+            return protocol.build_err(
+                "has_init with no model leaves: empty init rejected")
         with self.cond:
             taken = set()
             for w, o in self.workers.items():
@@ -274,9 +400,13 @@ class CoordinatorState:
                 return protocol.build_err(
                     f"client ids {sorted(taken)} already registered "
                     "to another worker")
+            resumed = worker in self.workers
             self.workers[worker] = cids
             self._conn_worker[conn_id] = worker
             self._worker_conn[worker] = conn_id
+            # fresh registration or re-join: whatever view we tracked
+            # for this worker id is gone with the old process/connection
+            self._served.pop(worker, None)
             if header.get("has_init") and self.leaves is None:
                 self.leaves = [np.asarray(t) for t in tensors]
             if self._t0 is None:
@@ -285,10 +415,11 @@ class CoordinatorState:
             return protocol.build_ok({
                 "round": self.round, "version": self.version,
                 "mode": self.mode, "num_clients": self.num_clients,
-                "num_rounds": self.num_rounds})
+                "num_rounds": self.num_rounds, "resumed": resumed})
 
-    def _op_get_model(self, header: dict) -> bytes:
+    def _op_get_model(self, conn_id: int, header: dict) -> bytes:
         want = int(header.get("round", 0))
+        have = int(header.get("have_version", -1))
         with self.cond:
             if self.mode == "sync":
                 self._wait(lambda: self.assembled
@@ -299,13 +430,48 @@ class CoordinatorState:
             if self.leaves is None:
                 return protocol.build_err("no model: no worker sent init "
                                           "leaves yet")
-            # snapshot refs only — aggregation *replaces* self.leaves,
-            # never mutates it, so the (large) tensor serialization can
-            # run outside the coordinator's one condition lock
+            # raw path: snapshot refs only — aggregation *replaces*
+            # self.leaves, never mutates it, so the (large) tensor
+            # serialization runs outside the coordinator's one condition
+            # lock.  The codec path below instead encodes under the
+            # lock: the per-worker served view must advance atomically
+            # with the diff, and at GNN model sizes (tens of kB) the
+            # encode is microseconds — revisit with per-worker locks if
+            # models grow orders of magnitude.
             leaves = self.leaves
-            header = {"round": self.round, "version": self.version,
-                      "done": self.done, "accs": list(self.acc_history)}
-        return protocol.build_ok(header, leaves)
+            head = {"round": self.round, "version": self.version,
+                    "serial": self.serial, "done": self.done,
+                    "accs": list(self.acc_history)}
+            if self.mode == "sync" and self.sample_frac is not None \
+                    and not self.done:
+                head["sampled"] = sorted(self._sampled(self.round))
+            worker = self._conn_worker.get(conn_id)
+            served = self._served.get(worker) if worker else None
+            if self.weight_codec is not None and worker is not None:
+                if served is not None and served[0] == have:
+                    # version diff against the exact view this worker
+                    # holds; the new view is base + decode(diff) on
+                    # BOTH ends (leaf_add), so they stay bit-identical
+                    # and codec error self-corrects next diff
+                    diff = [np.asarray(c, np.float32) - b
+                            for c, b in zip(leaves, served[1])]
+                    payload, shapes = encode_leaves(self.weight_codec, diff)
+                    view = leaf_add(served[1],
+                                    decode_leaves(self.weight_codec,
+                                                  payload, shapes))
+                    head.update(kind="delta", codec=self.weight_codec,
+                                shapes=shapes)
+                else:
+                    # first fetch or re-join: full raw model, which
+                    # becomes the worker's view as-is
+                    payload, view = leaves, leaves
+                    head["kind"] = "full"
+                self._served[worker] = (self.serial, view)
+            else:
+                payload = leaves
+                head["kind"] = "full"
+            self._charge_wire("down", wire.tensors_nbytes(payload))
+        return protocol.build_ok(head, payload)
 
     def _op_pulled(self, header: dict) -> bytes:
         rnd = int(header["round"])
@@ -318,33 +484,58 @@ class CoordinatorState:
     def _op_wait_pulled(self, header: dict) -> bytes:
         rnd = int(header["round"])
         with self.cond:
-            # barrier: every *surviving* client pulled, or the round
-            # already moved on (a late waiter must not deadlock)
+            # barrier: every *surviving sampled* client pulled, or the
+            # round already moved on (a late waiter must not deadlock)
             self._wait(lambda: self.round != rnd
-                       or self.active_clients <= self.pulled)
+                       or (self._sampled(rnd)
+                           & self.active_clients) <= self.pulled)
             return protocol.build_ok()
 
-    def _op_update(self, header: dict, tensors) -> bytes:
-        leaves = [np.asarray(t) for t in tensors]
+    def _op_update(self, conn_id: int, header: dict, tensors) -> bytes:
+        tensors = [np.asarray(t) for t in tensors]
         rec = {
             "client_id": int(header["client_id"]),
             "weight": float(header["weight"]),
             "loss": float(header.get("loss", float("nan"))),
             "modelled_s": float(header.get("modelled_s", 0.0)),
             "measured_s": float(header.get("measured_s", 0.0)),
-            "leaves": leaves,
+            "barrier_s": float(header.get("barrier_s", 0.0)),
         }
+        codec = header.get("codec") if header.get("kind") == "delta" \
+            else None
         with self.cond:
+            if codec is not None:
+                delta = decode_leaves(codec, tensors, header["shapes"])
             if self.mode == "sync":
                 rnd = int(header["round"])
                 if rnd != self.round:
                     return protocol.build_err(
                         f"update for round {rnd} but coordinator is at "
                         f"round {self.round}")
+                if codec is not None:
+                    # codec-encoded delta vs the worker's served view:
+                    # reconstruct the full local params for FedAvg
+                    worker = self._conn_worker.get(conn_id)
+                    served = self._served.get(worker) if worker else None
+                    if served is None:
+                        return protocol.build_err(
+                            "delta update without a served model view "
+                            "(get_model must precede update)")
+                    rec["leaves"] = leaf_add(served[1], delta)
+                else:
+                    rec["leaves"] = tensors
+                # charge only accepted updates: a refused or ignored
+                # payload must not inflate the round's weight ledger
+                # (the bytes the int8-vs-raw comparison is made of)
+                self._charge_wire("up", wire.tensors_nbytes(tensors))
                 self.updates[rec["client_id"]] = rec
                 self._maybe_aggregate_sync()
             else:
+                # async updates are deltas by construction; a codec just
+                # changes the wire form, so the decode is all it takes
+                rec["leaves"] = delta if codec is not None else tensors
                 rec["version"] = int(header["version"])
+                self._charge_wire("up", wire.tensors_nbytes(tensors))
                 self.buffer.append(rec)
                 self._maybe_aggregate_async()
             return protocol.build_ok({"round": self.round,
@@ -355,7 +546,11 @@ class CoordinatorState:
         with self.cond:
             return protocol.build_ok({
                 "mode": self.mode, "round": self.round,
-                "version": self.version, "done": self.done,
+                "version": self.version, "serial": self.serial,
+                "done": self.done,
+                "weight_codec": self.weight_codec,
+                "sample_frac": self.sample_frac,
+                "weight_bytes_cum": self.weight_bytes_cum,
                 "workers": {w: sorted(c) for w, c in self.workers.items()},
                 "accs": list(self.acc_history),
                 "cum_modelled_s": self.cum_modelled_s,

@@ -125,21 +125,34 @@ class CoordinatorClient:
 
     def hello(self, worker_id: str, client_ids: list[int],
               init_leaves=None) -> dict:
-        """Register; the first worker to carry ``init_leaves`` seeds the
-        global model (every worker inits identically from the shared
-        seed, so any of them is authoritative)."""
+        """Register (or *re*-register: a re-hello with the same
+        ``worker_id``/``client_ids`` on a fresh connection is a worker
+        re-join, and catches up from the current model).  The first
+        worker to carry ``init_leaves`` seeds the global model (every
+        worker inits identically from the shared seed, so any of them
+        is authoritative).  ``has_init`` is true only for a *non-empty*
+        leaf list — an empty list is "no init", not a zero-parameter
+        model."""
+        leaves = list(init_leaves) if init_leaves is not None else []
         h, _ = self._rpc(OP_HELLO,
                          {"worker_id": worker_id,
                           "client_ids": [int(c) for c in client_ids],
-                          "has_init": init_leaves is not None},
-                         init_leaves or ())
+                          "has_init": len(leaves) > 0},
+                         leaves)
         return h
 
-    def get_model(self, round_idx: int) -> tuple[dict, list[np.ndarray]]:
+    def get_model(self, round_idx: int, *,
+                  have_version: int = -1) -> tuple[dict, list[np.ndarray]]:
         """Sync: blocks until round ``round_idx`` is open (the previous
         round aggregated).  Async: returns the latest model at once.
-        Header carries {round, version, done}."""
-        return self._rpc(OP_GET_MODEL, {"round": int(round_idx)})
+        ``have_version`` is the serial of the model view this worker
+        already holds (-1 = none): when the coordinator runs a weight
+        codec and its served-view record matches, the response is a
+        codec-encoded version diff (header kind="delta") instead of the
+        full model.  Header carries {round, version, serial, done,
+        kind, [codec, shapes], [sampled]}."""
+        return self._rpc(OP_GET_MODEL, {"round": int(round_idx),
+                                        "have_version": int(have_version)})
 
     def pulled(self, round_idx: int, client_ids: list[int]) -> None:
         self._rpc(OP_PULLED, {"round": int(round_idx),

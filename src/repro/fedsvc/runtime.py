@@ -147,3 +147,23 @@ class EvalHarness:
 
     def evaluate_leaves(self, leaves) -> float:
         return self.trainer.evaluate(self.trainer.leaves_to_params(leaves))
+
+
+def make_coordinator_state(cfg: RunConfig, *, harness: EvalHarness | None
+                           = None, net=None):
+    """One CoordinatorState wired from a RunConfig's strategy — the
+    single place the control-plane knobs (aggregation mode, FedBuff
+    buffer, weight codec, client sampling) flow from Strategy into the
+    coordinator, shared by the CLI, benchmarks, and tests so they can
+    never drift."""
+    from .coordinator import CoordinatorState   # avoid import cycle
+    st = cfg.build_strategy()
+    harness = EvalHarness(cfg) if harness is None else harness
+    return CoordinatorState(
+        num_clients=cfg.num_clients, num_rounds=cfg.rounds,
+        mode=st.aggregation, buffer_size=st.buffer_size,
+        staleness_decay=st.staleness_decay,
+        weight_codec=st.weight_codec,
+        sample_frac=st.sample_frac, sample_seed=cfg.seed,
+        init_leaves=harness.init_leaves(),
+        eval_fn=harness.evaluate_leaves, net=net)

@@ -22,14 +22,28 @@ Async (FedBuff-style): no barriers — pull, train, push, submit
 ``delta = local − base`` tagged with the model version it trained
 from, then immediately fetch the newest model and go again.
 
+Weight wire (Strategy.weight_codec): when a weight codec is configured
+the worker ships each client's update as a codec-encoded delta
+(local − held model) with a per-client :class:`LeafErrorFeedback`
+residual carry, and consumes get_model responses that may be version
+diffs against the model view it already holds — the coordinator tracks
+that view bit-identically, so diff chains never drift.
+
+Client sampling: a sync get_model response may carry the round's
+``sampled`` client set; a worker none of whose clients are sampled
+skips the round entirely (no pull, no barrier, no update) and parks on
+the next round's get_model.
+
 Scenario injection (:class:`WorkerScenario`): a pacing multiplier and a
 fixed straggler delay stretch this worker's round both in *measured*
 wall-clock (real sleeps) and in the *modelled* ledger (the same
 multiplier applied to the NetworkModel-based ``client_time``), so the
 two ledgers stay comparable — the TcpTransport discipline.  A dropout
-probability makes the worker die mid-round (after the pull barrier,
-before its update), which exercises the coordinator's deregistration
-path.
+probability (or a deterministic ``drop_round``) makes the worker die
+mid-round (after the pull barrier, before its update), which exercises
+the coordinator's deregistration path; with ``rejoin`` it comes back
+after ``rejoin_delay_s`` on a fresh connection, re-hellos with the same
+ids, and catches up from the current model.
 """
 
 from __future__ import annotations
@@ -42,7 +56,10 @@ from typing import Optional
 import numpy as np
 
 from repro.core import FederatedGNNTrainer
+from repro.exchange.codec import decode_leaves, encode_leaves
+from repro.exchange.delta import LeafErrorFeedback
 
+from .aggregation import leaf_add, leaf_sub
 from .protocol import CoordinatorClient
 from .runtime import RunConfig
 
@@ -52,8 +69,17 @@ class WorkerScenario:
     """Injected heterogeneity for one worker."""
     pacing: float = 1.0         # >1: this worker is uniformly slower
     straggler_s: float = 0.0    # fixed extra seconds per round
+    pull_delay_s: float = 0.0   # extra seconds in the pull phase (sync:
+                                # lands before `pulled`, so it is what
+                                # everyone else's wait_pulled barrier sees)
     dropout_prob: float = 0.0   # per-round chance of dying mid-round
     seed: int = 0
+    # deterministic churn: die exactly once, mid-round `drop_round`
+    # (sync) / mid-iteration `drop_round` (async); with rejoin=True the
+    # worker reconnects after rejoin_delay_s instead of staying dead
+    drop_round: Optional[int] = None
+    rejoin: bool = False
+    rejoin_delay_s: float = 0.5
 
     def round_delay(self, measured_train_s: float) -> float:
         return max(0.0, (self.pacing - 1.0) * measured_train_s) \
@@ -77,9 +103,19 @@ class FedWorker:
         self.scenario = scenario or WorkerScenario()
         self._rng = np.random.default_rng(self.scenario.seed)
         self.trainer = trainer if trainer is not None else cfg.build_trainer()
+        st = self.trainer.strategy
+        self.weight_codec: str | None = st.weight_codec
+        self._wef: dict[int, LeafErrorFeedback] = {
+            ci: LeafErrorFeedback() for ci in self.client_ids
+        } if (self.weight_codec is not None
+              and st.weight_error_feedback) else {}
+        self._view: list[np.ndarray] | None = None  # model we hold
+        self._view_serial = -1
         self.records: list[dict] = []     # one per completed local round
         self.dropped = False              # scenario killed this worker
         self.disconnected = False         # coordinator went away mid-run
+        self.rejoins = 0                  # completed re-join cycles
+        self._drop_fired = False          # drop_round fires exactly once
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -91,28 +127,89 @@ class FedWorker:
         # rows *before* registering — the coordinator's assembly gate
         # guarantees nobody pulls until every worker got here.
         tr.pretrain_round(self.client_ids)
-        client = CoordinatorClient(self.addr)
-        try:
-            hello = client.hello(self.worker_id, self.client_ids,
-                                 init_leaves=tr.params_leaves())
-            if hello["mode"] == "sync":
-                self._run_sync(client, start_round=int(hello["round"]))
-            else:
-                self._run_async(client)
-        except WorkerDropout:
-            self.dropped = True
-        except (ConnectionError, OSError):
-            # the coordinator stopped (timeout, lingered out, or died)
-            # mid-RPC: end gracefully, keeping the completed records
-            self.disconnected = True
-        finally:
-            client.close()
-        return self.records
+        first = True
+        while True:
+            try:
+                client = CoordinatorClient(self.addr)
+            except (ConnectionError, OSError):
+                if first:
+                    raise              # a dead address is a setup error
+                self.disconnected = True   # coordinator gone mid-rejoin
+                return self.records
+            first = False
+            try:
+                hello = client.hello(self.worker_id, self.client_ids,
+                                     init_leaves=tr.params_leaves())
+                if hello["mode"] == "sync":
+                    self._run_sync(client, start_round=int(hello["round"]))
+                else:
+                    self._run_async(client)
+                return self.records
+            except WorkerDropout:
+                self.dropped = True
+                if not self.scenario.rejoin:
+                    return self.records
+            except (ConnectionError, OSError):
+                # the coordinator stopped (timeout, lingered out, or
+                # died) mid-RPC: end gracefully, keeping the records
+                self.disconnected = True
+                return self.records
+            finally:
+                client.close()
+            # re-join: fresh connection, same ids.  The held model view
+            # and EF residuals describe a conversation that died with
+            # the old connection — drop them and catch up from the
+            # coordinator's current full model.
+            self._view, self._view_serial = None, -1
+            for ef in self._wef.values():
+                ef.reset()
+            time.sleep(self.scenario.rejoin_delay_s)
+            self.dropped = False
+            self.rejoins += 1
 
-    def _maybe_drop(self) -> None:
-        if self.scenario.dropout_prob > 0 \
-                and self._rng.random() < self.scenario.dropout_prob:
+    def _maybe_drop(self, round_idx: int) -> None:
+        sc = self.scenario
+        if sc.drop_round is not None and not self._drop_fired \
+                and round_idx == sc.drop_round:
+            self._drop_fired = True
             raise WorkerDropout(self.worker_id)
+        if sc.dropout_prob > 0 and self._rng.random() < sc.dropout_prob:
+            raise WorkerDropout(self.worker_id)
+
+    # -- weight wire -------------------------------------------------------
+
+    def _fetch_model(self, client: CoordinatorClient, want_round: int
+                     ) -> tuple[dict, list[np.ndarray]]:
+        """get_model + view upkeep: apply a version diff to the held
+        view, or adopt a full model; either way the result is the exact
+        leaves the coordinator records as this worker's served view."""
+        head, tensors = client.get_model(want_round,
+                                         have_version=self._view_serial)
+        if head.get("kind") == "delta":
+            leaves = leaf_add(self._view,
+                              decode_leaves(head["codec"], tensors,
+                                            head["shapes"]))
+        else:
+            leaves = tensors
+        self._view = leaves
+        self._view_serial = int(head.get("serial", -1))
+        return head, leaves
+
+    def _update_payload(self, ci: int, params_leaves: list[np.ndarray]
+                        ) -> tuple[dict, list]:
+        """One client's update for the wire: raw full leaves (legacy),
+        or a codec-encoded delta vs the held view with EF carry."""
+        if self.weight_codec is None:
+            return {}, params_leaves
+        delta = leaf_sub(params_leaves, self._view)
+        ef = self._wef.get(ci)
+        comp = ef.compensate(delta) if ef is not None else delta
+        tensors, shapes = encode_leaves(self.weight_codec, comp)
+        if ef is not None:
+            ef.commit(comp, decode_leaves(self.weight_codec, tensors,
+                                          shapes))
+        return {"kind": "delta", "codec": self.weight_codec,
+                "shapes": shapes}, tensors
 
     # -- sync --------------------------------------------------------------
 
@@ -120,43 +217,65 @@ class FedWorker:
         tr = self.trainer
         r = start_round
         while True:
-            head, leaves = client.get_model(r)
+            head, leaves = self._fetch_model(client, r)
             if head["done"]:
                 return
             r = int(head["round"])
+            sampled = head.get("sampled")
+            mine = self.client_ids if sampled is None else \
+                [c for c in self.client_ids if c in sampled]
+            if not mine:
+                # none of our clients drawn this round: skip straight
+                # to the next round's get_model (which blocks until the
+                # sampled subset finishes aggregating)
+                r += 1
+                continue
             t_start = time.perf_counter()
             params = tr.leaves_to_params(leaves)
             tr.set_round_tau(r, head.get("accs", ()))
-            for ci in self.client_ids:
+            for ci in mine:
                 tr._fill_cache(ci)
-            client.pulled(r, self.client_ids)
+            if self.scenario.pull_delay_s > 0:
+                time.sleep(self.scenario.pull_delay_s)
+            client.pulled(r, mine)
             # dropout lands after the pull barrier contribution and
             # before any update — the nastiest spot for the coordinator
-            self._maybe_drop()
+            self._maybe_drop(r)
             results = [tr.client_round(ci, params, fill_cache=False)
-                       for ci in self.client_ids]
+                       for ci in mine]
             t_train = time.perf_counter() - t_start
             delay = self.scenario.round_delay(t_train)
             if delay > 0:
                 time.sleep(delay)
+            # the barrier wait is coordination stall, not this worker's
+            # work: measured_s must not charge the slowest straggler's
+            # round to every client (round_measured_s = max over
+            # clients would then exceed any single worker's own work)
+            t_barrier = time.perf_counter()
             client.wait_pulled(r)
+            barrier_s = time.perf_counter() - t_barrier
             for res in results:
                 if res.push_plan is not None:
                     tr.ex_clients[res.client_id].apply_push(res.push_plan)
-            measured = time.perf_counter() - t_start
+            measured = time.perf_counter() - t_start - barrier_s
             for res in results:
+                extra, payload = self._update_payload(
+                    res.client_id, tr.params_leaves(res.params))
                 client.update(
                     {"round": r, "client_id": res.client_id,
                      "weight": res.weight, "loss": res.loss,
                      "modelled_s": res.client_time * self.scenario.pacing
-                     + self.scenario.straggler_s,
-                     "measured_s": measured},
-                    tr.params_leaves(res.params))
+                     + self.scenario.straggler_s
+                     + self.scenario.pull_delay_s,
+                     "measured_s": measured, "barrier_s": barrier_s,
+                     **extra},
+                    payload)
             self.records.append({
-                "round": r, "clients": self.client_ids,
-                "measured_s": measured,
+                "round": r, "clients": mine,
+                "measured_s": measured, "barrier_s": barrier_s,
                 "modelled_s": max(res.client_time for res in results)
-                * self.scenario.pacing + self.scenario.straggler_s,
+                * self.scenario.pacing + self.scenario.straggler_s
+                + self.scenario.pull_delay_s,
                 "losses": [res.loss for res in results]})
             r += 1
 
@@ -166,14 +285,14 @@ class FedWorker:
         tr = self.trainer
         it = 0
         while True:
-            head, leaves = client.get_model(0)
+            head, leaves = self._fetch_model(client, 0)
             if head["done"]:
                 return
             version = int(head["version"])
             base = leaves
             params = tr.leaves_to_params(leaves)
             tr.set_round_tau(it, head.get("accs", ()))
-            self._maybe_drop()
+            self._maybe_drop(it)
             head = {}
             for ci in self.client_ids:
                 # delay baseline is per client: each client's update is
@@ -190,15 +309,21 @@ class FedWorker:
                 if delay > 0:
                     time.sleep(delay)
                 measured = time.perf_counter() - t_client
-                delta = [np.asarray(l) - np.asarray(b) for l, b in
-                         zip(tr.params_leaves(res.params), base)]
+                if self.weight_codec is None:
+                    extra, payload = {}, leaf_sub(
+                        tr.params_leaves(res.params), base)
+                else:
+                    # _update_payload's delta base is the held view,
+                    # which IS this iteration's base model
+                    extra, payload = self._update_payload(
+                        ci, tr.params_leaves(res.params))
                 head = client.update(
                     {"version": version, "client_id": res.client_id,
                      "weight": res.weight, "loss": res.loss,
                      "modelled_s": res.client_time * self.scenario.pacing
                      + self.scenario.straggler_s,
-                     "measured_s": measured},
-                    delta)
+                     "measured_s": measured, **extra},
+                    payload)
                 self.records.append({
                     "iteration": it, "client": ci, "version": version,
                     "measured_s": measured,

@@ -9,10 +9,12 @@ set, exactly like the aggregation server of the in-process simulator.
         --graph reddit --scale 0.05 --graph-seed 3 --clients 2 \
         --strategy E --rounds 2
 
-then point workers (repro.launch.fed_worker) at host:7050.  Sync/async
-and the FedBuff knobs come from the strategy:
+then point workers (repro.launch.fed_worker) at host:7050.  Sync/async,
+the FedBuff knobs, weight-wire compression, and per-round client
+sampling all come from the strategy:
 ``--set aggregation='"async"' --set buffer_size=2
---set staleness_decay=0.5``.
+--set staleness_decay=0.5 --set weight_codec=int8
+--set sample_frac=0.5``.
 
 The process exits once all rounds aggregated (plus a short linger so
 workers can observe the done flag), printing one JSON line per
@@ -27,8 +29,8 @@ import json
 import pathlib
 import time
 
-from repro.fedsvc.coordinator import CoordinatorState, serve_in_thread
-from repro.fedsvc.runtime import EvalHarness, RunConfig
+from repro.fedsvc.coordinator import serve_in_thread
+from repro.fedsvc.runtime import RunConfig, make_coordinator_state
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -49,17 +51,12 @@ def main(argv: list[str] | None = None) -> None:
 
     cfg = RunConfig.from_args(args)
     strategy = cfg.build_strategy()
-    harness = EvalHarness(cfg)
-    state = CoordinatorState(
-        num_clients=cfg.num_clients, num_rounds=cfg.rounds,
-        mode=strategy.aggregation, buffer_size=strategy.buffer_size,
-        staleness_decay=strategy.staleness_decay,
-        init_leaves=harness.init_leaves(),
-        eval_fn=harness.evaluate_leaves)
+    state = make_coordinator_state(cfg)
     handle = serve_in_thread(state, host=args.host, port=args.port)
     print(f"fed_coordinator listening on {handle.host}:{handle.port} "
           f"(mode={strategy.aggregation}, clients={cfg.num_clients}, "
-          f"rounds={cfg.rounds})", flush=True)
+          f"rounds={cfg.rounds}, weight_codec={strategy.weight_codec}, "
+          f"sample_frac={strategy.sample_frac})", flush=True)
     try:
         finished = handle.join(timeout=args.timeout)
         with state.cond:

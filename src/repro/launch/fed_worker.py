@@ -17,6 +17,13 @@ straggler, ``--straggler-s`` adds a fixed per-round delay, and
 ``--dropout-prob`` gives it a per-round chance of dying mid-round —
 all three are reflected in both the measured wall clock (real sleeps)
 and the modelled round-time ledger it reports to the coordinator.
+
+Churn: ``--drop-round N`` kills the worker deterministically mid-round
+N (after its pull, before its update — the spot that stresses the
+coordinator most); adding ``--rejoin`` makes it come back after
+``--rejoin-delay-s`` seconds on a fresh connection, re-hello with the
+same client ids, and catch up from the coordinator's current model —
+the worker re-join path end to end.
 """
 
 from __future__ import annotations
@@ -39,6 +46,12 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--straggler-s", type=float, default=0.0)
     ap.add_argument("--dropout-prob", type=float, default=0.0)
     ap.add_argument("--scenario-seed", type=int, default=0)
+    ap.add_argument("--drop-round", type=int, default=None,
+                    help="die deterministically mid-round N (once)")
+    ap.add_argument("--rejoin", action="store_true",
+                    help="reconnect + re-hello after a drop instead of "
+                         "staying dead")
+    ap.add_argument("--rejoin-delay-s", type=float, default=0.5)
     RunConfig.add_args(ap)
     args = ap.parse_args(argv)
 
@@ -47,7 +60,10 @@ def main(argv: list[str] | None = None) -> None:
     scenario = WorkerScenario(pacing=args.pacing,
                               straggler_s=args.straggler_s,
                               dropout_prob=args.dropout_prob,
-                              seed=args.scenario_seed)
+                              seed=args.scenario_seed,
+                              drop_round=args.drop_round,
+                              rejoin=args.rejoin,
+                              rejoin_delay_s=args.rejoin_delay_s)
     worker = FedWorker(cfg, client_ids, args.coordinator,
                        worker_id=args.worker_id, scenario=scenario)
     print(f"fed_worker {worker.worker_id} clients={client_ids} "
@@ -57,7 +73,8 @@ def main(argv: list[str] | None = None) -> None:
         print(json.dumps(rec), flush=True)
     status = "DROPPED" if worker.dropped else \
         "DISCONNECTED" if worker.disconnected else "DONE"
-    print(f"fed_worker {worker.worker_id} {status}", flush=True)
+    rejoined = f" rejoins={worker.rejoins}" if worker.rejoins else ""
+    print(f"fed_worker {worker.worker_id} {status}{rejoined}", flush=True)
 
 
 if __name__ == "__main__":

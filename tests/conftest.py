@@ -21,7 +21,9 @@ from repro.graphs import bfs_partition, make_client_shards, make_graph
 
 def pytest_configure(config):
     config.addinivalue_line(
-        "markers", "slow: multi-process end-to-end control-plane runs")
+        "markers", "slow: heavy control-plane deployments (multi-process "
+                   "CLI smokes, full multi-round thread deployments) — "
+                   "run in CI's control-plane job, not tier1")
 
 
 @pytest.fixture(scope="session")

@@ -344,3 +344,84 @@ def test_network_model_codec_bytes():
         int(round(10 * 32 * 2 * 1.125))
     assert net.transfer_time(10, 32, 2, bytes_per_scalar=1.125) < \
         net.transfer_time(10, 32, 2)
+
+
+# -- leaf-pytree codec form (the weight wire) ---------------------------------
+
+def _leaves(rng=None):
+    rng = rng or np.random.default_rng(0)
+    return [rng.standard_normal((37, 16)).astype(np.float32),
+            rng.standard_normal(16).astype(np.float32),
+            np.float32(0.75).reshape(())]
+
+
+def test_leaf_codec_roundtrip_shapes_and_exactness():
+    from repro.exchange import decode_leaves, encode_leaves, wire
+    leaves = _leaves()
+    sizes = {}
+    for name in available_codecs():
+        tensors, shapes = encode_leaves(name, leaves)
+        assert len(tensors) == get_codec(name).wire_arrays * len(leaves)
+        back = decode_leaves(name, tensors, shapes)
+        assert [b.shape for b in back] == [l.shape for l in leaves]
+        assert all(b.dtype == np.float32 for b in back)
+        sizes[name] = wire.tensors_nbytes(tensors)
+        if name == "fp32":
+            for b, l in zip(back, leaves):
+                assert b.tobytes() == l.tobytes()     # lossless
+        else:
+            step = max(np.abs(l).max() for l in leaves)
+            err = max(np.abs(b - l).max() for b, l in zip(back, leaves))
+            assert 0 < err <= step / 100              # lossy but bounded
+    # the point of the exercise: int8 leaves are ~4x smaller on the wire
+    assert sizes["fp32"] / sizes["int8"] > 3.0
+    assert sizes["fp32"] / sizes["fp16"] > 1.8
+
+
+def test_leaf_codec_mismatched_payload_rejected():
+    from repro.exchange import decode_leaves, encode_leaves
+    tensors, shapes = encode_leaves("int8", _leaves())
+    with pytest.raises(ValueError, match="arrays"):
+        decode_leaves("int8", tensors[:-1], shapes)
+
+
+def test_leaf_error_feedback_carries_residual():
+    """Weight-plane EF: pushing the same delta repeatedly through int8
+    keeps the *time-averaged* decoded value on the true delta — the
+    residual is carried, not dropped, and stays bounded by one
+    quantization step."""
+    from repro.exchange import (LeafErrorFeedback, decode_leaves,
+                                encode_leaves)
+    rng = np.random.default_rng(3)
+    delta = [rng.standard_normal((8, 8)).astype(np.float32) * 1e-3]
+    ef = LeafErrorFeedback()
+    assert ef.max_abs_residual == 0.0
+    decoded_sum = np.zeros_like(delta[0])
+    n = 20
+    for _ in range(n):
+        comp = ef.compensate(delta)
+        tensors, shapes = encode_leaves("int8", comp)
+        dec = decode_leaves("int8", tensors, shapes)
+        ef.commit(comp, dec)
+        decoded_sum += dec[0]
+    step = float(np.abs(delta[0]).max()) / 127 * 2
+    assert 0 < ef.max_abs_residual <= step
+    # time-averaged decoded value tracks the true delta to well under a
+    # quantization step (the bias EF exists to kill)
+    np.testing.assert_allclose(decoded_sum / n, delta[0], atol=step / 4)
+    # fp32 wire is exact: residual stays zero
+    ef32 = LeafErrorFeedback()
+    comp = ef32.compensate(delta)
+    t32, s32 = encode_leaves("fp32", comp)
+    ef32.commit(comp, decode_leaves("fp32", t32, s32))
+    assert ef32.max_abs_residual == 0.0
+    ef.reset()
+    assert ef.max_abs_residual == 0.0
+
+
+def test_model_transfer_time_codec_aware():
+    net = NetworkModel()
+    raw = net.model_transfer_time(10_000)
+    q = net.model_transfer_time(10_000, bytes_per_scalar=1.0)
+    assert q < raw
+    assert raw == net.model_transfer_time(10_000, bytes_per_scalar=4.0)

@@ -23,7 +23,8 @@ from repro.fedsvc import protocol
 from repro.fedsvc.aggregation import (apply_buffered_deltas, fedavg_leaves,
                                       staleness_scale)
 from repro.fedsvc.coordinator import CoordinatorState, serve_in_thread
-from repro.fedsvc.runtime import EvalHarness, RunConfig
+from repro.fedsvc.runtime import (EvalHarness, RunConfig,
+                                  make_coordinator_state)
 from repro.fedsvc.worker import FedWorker, WorkerScenario, run_in_thread
 from repro.graphs import make_graph
 from repro.launch.embed_server import serve_in_thread as embed_serve
@@ -487,6 +488,273 @@ def test_trainer_applies_delta_schedule():
     assert all(ex.delta.tau == 0.0 for ex in tr.ex_clients)
     tr.set_round_tau(2)
     assert all(ex.delta.tau == pytest.approx(0.1) for ex in tr.ex_clients)
+
+
+# -- coordinator churn + aggregation-set regressions --------------------------
+
+
+def _wait_for(predicate, timeout=5.0):
+    deadline = time.time() + timeout
+    while not predicate() and time.time() < deadline:
+        time.sleep(0.05)
+    assert predicate()
+
+
+def test_sync_orphaned_update_not_aggregated():
+    """Regression: an update from a client whose worker deregistered
+    mid-round must not fold into FedAvg (the old trigger only checked
+    active ⊆ updates, so the dead client's update rode along), and the
+    history must record the set actually aggregated."""
+    state = _state(num_rounds=1)
+    with serve_in_thread(state) as coord:
+        a = protocol.CoordinatorClient(coord.address)
+        b = protocol.CoordinatorClient(coord.address)
+        a.hello("w0", [0], init_leaves=[LEAF])
+        b.hello("w1", [1])
+        a.get_model(0)
+        a.pulled(0, [0])
+        b.pulled(0, [1])
+        b.update({"round": 0, "client_id": 1, "weight": 9.0}, [LEAF * 100])
+        assert state.round == 0               # still waiting on client 0
+        b.close()                             # dies with update pending
+        _wait_for(lambda: "w1" not in state.workers)
+        assert 1 not in state.updates         # orphan cleared
+        a.update({"round": 0, "client_id": 0, "weight": 1.0}, [LEAF + 2])
+        _wait_for(lambda: state.round == 1)
+        assert state.history[0]["clients"] == [0]
+        np.testing.assert_array_equal(state.leaves[0], LEAF + 2)
+        a.close()
+
+
+def test_sync_all_workers_drop_does_not_wedge():
+    """Regression: if every worker dies mid-round, the pending updates
+    are stale — a later re-join must restart the round from scratch,
+    not aggregate the dead processes' leftovers."""
+    state = _state(num_rounds=1)
+    with serve_in_thread(state) as coord:
+        a = protocol.CoordinatorClient(coord.address)
+        b = protocol.CoordinatorClient(coord.address)
+        a.hello("w0", [0], init_leaves=[LEAF])
+        b.hello("w1", [1])
+        a.get_model(0)
+        a.pulled(0, [0])
+        a.update({"round": 0, "client_id": 0, "weight": 1.0}, [LEAF * 50])
+        # kill the updater FIRST and wait for its deregistration — if
+        # the other worker's death were observed first, the coordinator
+        # would legitimately close the round over the survivor
+        a.close()
+        _wait_for(lambda: "w0" not in state.workers)
+        assert 0 not in state.updates         # orphan cleared at once
+        b.close()                             # now everyone is gone
+        _wait_for(lambda: not state.workers)
+        assert state.updates == {} and state.round == 0
+        # one worker re-joins owning both clients and replays the round
+        c = protocol.CoordinatorClient(coord.address)
+        c.hello("w2", [0, 1])
+        c.get_model(0)
+        c.pulled(0, [0, 1])
+        c.wait_pulled(0)
+        c.update({"round": 0, "client_id": 0, "weight": 1.0}, [LEAF + 1])
+        c.update({"round": 0, "client_id": 1, "weight": 1.0}, [LEAF + 3])
+        _wait_for(lambda: state.round == 1)
+        assert state.history[0]["clients"] == [0, 1]
+        np.testing.assert_array_equal(
+            state.leaves[0],
+            fedavg_leaves([[LEAF + 1], [LEAF + 3]], [1.0, 1.0])[0])
+        c.close()
+
+
+def test_hello_empty_init_consistency():
+    """Regression: an empty-but-non-None init leaves list used to set
+    has_init=True with zero tensors, seeding a zero-parameter model.
+    The stub now sends has_init only for non-empty leaves, and the
+    server rejects a has_init header without tensors."""
+    state = _state()
+    with serve_in_thread(state) as coord:
+        with protocol.CoordinatorClient(coord.address) as c:
+            h = c.hello("w0", [0], init_leaves=[])
+            assert h["mode"] == "sync"
+            assert state.leaves is None       # [] is "no init", not a model
+            # a crafted has_init with no tensors is refused server-side
+            with pytest.raises(RuntimeError, match="empty init"):
+                c._rpc(protocol.OP_HELLO,
+                       {"worker_id": "w0", "client_ids": [0],
+                        "has_init": True})
+            c.hello("w0", [0], init_leaves=[LEAF])   # re-hello, real init
+            assert state._num_params() == len(LEAF)
+
+
+def test_sync_client_sampling_subset_and_eligible_only():
+    """sample_frac=0.5 with K=2: each round runs over exactly one
+    client; the barrier and the FedAvg trigger ignore the unsampled
+    one, and a gratuitous update from it never enters the aggregate."""
+    state = _state(num_rounds=2, sample_frac=0.5)
+    with serve_in_thread(state) as coord:
+        a = protocol.CoordinatorClient(coord.address)
+        b = protocol.CoordinatorClient(coord.address)
+        a.hello("w0", [0], init_leaves=[LEAF])
+        b.hello("w1", [1])
+        stubs = {0: a, 1: b}
+        seen = []
+        for rnd in range(2):
+            h, _ = a.get_model(rnd)
+            assert not h["done"]
+            sampled = h["sampled"]
+            assert len(sampled) == 1
+            seen.append(sampled[0])
+            cid = sampled[0]
+            other = 1 - cid
+            # the unsampled client's update must not trigger or join
+            stubs[other].update({"round": rnd, "client_id": other,
+                                 "weight": 99.0}, [LEAF * 99])
+            assert state.round == rnd         # not aggregated
+            stubs[cid].pulled(rnd, [cid])
+            stubs[cid].wait_pulled(rnd)       # barrier ignores `other`
+            stubs[cid].update({"round": rnd, "client_id": cid,
+                               "weight": 1.0}, [LEAF + rnd])
+            _wait_for(lambda: state.round == rnd + 1)
+            assert state.history[rnd]["clients"] == [cid]
+            np.testing.assert_array_equal(state.leaves[0], LEAF + rnd)
+        assert state.done
+        a.close()
+        b.close()
+
+
+# -- weight-wire compression + churn (worker-level, strategy D) ---------------
+
+D_KW = dict(graph="reddit", scale=0.05, graph_seed=3, num_clients=2,
+            batch_size=64, epochs_per_round=2, seed=0)
+
+
+def _run_deployment(overrides, *, rounds=4, scenarios=None, timeout=600):
+    """Thread-deployment helper: coordinator + one worker per client,
+    strategy D (no embedding plane — these tests isolate the weight
+    wire and the churn machinery)."""
+    cfg = RunConfig(strategy="D", rounds=rounds, overrides=overrides,
+                    **D_KW)
+    state = make_coordinator_state(cfg)
+    scenarios = scenarios or {}
+    with serve_in_thread(state) as coord:
+        workers = [FedWorker(cfg, [i], coord.address, worker_id=f"w{i}",
+                             scenario=scenarios.get(i))
+                   for i in range(2)]
+        threads = [run_in_thread(w) for w in workers]
+        assert coord.join(timeout=timeout)
+        for t in threads:
+            t.join(timeout=60)
+    return state, workers
+
+
+@pytest.fixture(scope="module")
+def d_ref_run():
+    """Uninterrupted raw-weight-wire reference deployment (strategy D,
+    4 rounds) shared by the weight-codec and re-join tests."""
+    return _run_deployment({})
+
+
+@pytest.mark.slow
+def test_weight_codec_int8_ef_matches_raw_and_compresses(d_ref_run):
+    """Tentpole acceptance (test-scale): the int8+EF weight wire
+    reaches the raw fp32 baseline's peak accuracy within tolerance at
+    ≥3× fewer weight-plane bytes per steady-state round, with both
+    ledgers populated."""
+    ref_state, _ = d_ref_run
+    state, workers = _run_deployment({"weight_codec": "int8",
+                                      "weight_error_feedback": True})
+    assert len(state.history) == len(ref_state.history)
+    for h in state.history + ref_state.history:
+        assert h["weight_bytes"] > 0 and h["weight_modelled_s"] > 0
+    # steady state: round ≥ 1 (first get_models ship the full model)
+    raw_b = np.mean([h["weight_bytes"] for h in ref_state.history[1:]])
+    cmp_b = np.mean([h["weight_bytes"] for h in state.history[1:]])
+    assert raw_b / cmp_b >= 3.0, (raw_b, cmp_b)
+    # codec-aware modelled ledger follows the byte reduction
+    raw_t = np.mean([h["weight_modelled_s"] for h in ref_state.history[1:]])
+    cmp_t = np.mean([h["weight_modelled_s"] for h in state.history[1:]])
+    assert cmp_t < raw_t
+    peak_raw = max(h["accuracy"] for h in ref_state.history)
+    peak_cmp = max(h["accuracy"] for h in state.history)
+    assert peak_cmp >= peak_raw - 0.02, (peak_raw, peak_cmp)
+    # EF actually engaged: a lossy codec leaves a nonzero residual
+    assert any(ef.max_abs_residual > 0
+               for w in workers for ef in w._wef.values())
+
+
+@pytest.mark.slow
+def test_worker_rejoin_mid_training(d_ref_run):
+    """Acceptance: a worker killed mid-round re-joins on a fresh
+    connection with the same client ids, the run completes all rounds,
+    it participates again by the final round, and convergence matches
+    the uninterrupted run within tolerance."""
+    ref_state, _ = d_ref_run
+    # strategy-D rounds are sub-second once jit is warm: the rejoin
+    # delay must be short enough that the worker returns with rounds
+    # still to play
+    state, workers = _run_deployment(
+        {}, rounds=4,
+        scenarios={1: WorkerScenario(drop_round=1, rejoin=True,
+                                     rejoin_delay_s=0.05)})
+    assert workers[1].rejoins == 1
+    assert len(state.history) == 4
+    for h in state.history:
+        assert h["clients"]                   # never an empty aggregate
+        assert set(h["clients"]) <= {0, 1}
+    # the rejoined worker contributes again before the run ends
+    assert 1 in set(c for h in state.history[1:] for c in h["clients"])
+    final_ref = ref_state.history[-1]["accuracy"]
+    final = state.history[-1]["accuracy"]
+    assert final >= final_ref - 0.1, (final_ref, final)
+
+
+@pytest.mark.slow
+def test_weight_codec_async_smoke():
+    """FedBuff async with the compressed weight wire: updates are
+    codec-encoded deltas, downloads become version diffs, the run
+    reaches its aggregation budget with the wire ledger populated."""
+    state, workers = _run_deployment({"aggregation": "async",
+                                      "buffer_size": 2,
+                                      "weight_codec": "int8"}, rounds=2)
+    assert state.version == 2
+    assert all(h["weight_bytes"] > 0 and h["weight_modelled_s"] > 0
+               for h in state.history)
+    assert not any(w.disconnected and not w.records for w in workers)
+
+
+@pytest.mark.slow
+def test_sampled_sync_smoke_workers():
+    """sample_frac=0.5 end to end: every round aggregates exactly one
+    client, unsampled workers skip cleanly, and the run finishes."""
+    state, workers = _run_deployment({"sample_frac": 0.5})
+    assert len(state.history) == 4
+    for h in state.history:
+        assert len(h["clients"]) == 1
+    # each worker recorded only the rounds its client was drawn in
+    for i, w in enumerate(workers):
+        drawn = [h["round"] for h in state.history if h["clients"] == [i]]
+        assert [r["round"] for r in w.records] == drawn
+
+
+@pytest.mark.slow
+def test_barrier_wait_split_from_measured():
+    """Regression: a fast worker's measured_s used to include the sync
+    wait_pulled barrier, charging a slow *puller*'s delay to everyone
+    (round_measured_s = max over clients then exceeded any single
+    worker's own work).  The wait is now its own field."""
+    state, workers = _run_deployment(
+        {}, rounds=1,
+        scenarios={1: WorkerScenario(pull_delay_s=8.0)})
+    fast, slow = workers[0].records[0], workers[1].records[0]
+    # the slow puller spends 8s of its own pull phase: that is ITS
+    # measured time, and the fast worker's *barrier* wait — not the
+    # fast worker's measured time (8s >> the fast worker's round-0
+    # train incl. jit warmup, so the ordering is robust)
+    assert slow["measured_s"] >= 8.0
+    assert slow["barrier_s"] < 1.0
+    assert fast["barrier_s"] >= 2.0
+    assert fast["measured_s"] <= slow["measured_s"] - 2.0
+    assert state.history[0]["max_barrier_s"] >= 2.0
+    # the round ledger is the max of *own-work* times
+    assert state.history[0]["round_measured_s"] >= slow["measured_s"]
 
 
 def test_runconfig_roundtrip_and_strategy_build():
