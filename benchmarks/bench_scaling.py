@@ -1,6 +1,28 @@
-"""Fig. 13: client scaling (4 → 6 → 8 clients) for the main strategies."""
+"""Fig. 13 client scaling + graph-plane vertex-count scaling.
+
+Two sweeps:
+
+* **clients** — 4 → 6 → 8 clients for the main strategies (the paper's
+  Fig. 13), unchanged from the seed.
+* **graphplane** — R-MAT vertex counts 16k → 1M through the out-of-core
+  plane: each size builds an mmap store + LDG partition + 8 client
+  shards in a *subprocess* (``repro.launch.build_store`` self-reports
+  its peak RSS, so the builder's bounded-memory claim is measured, not
+  asserted), then runs one federated round in-process off the store.
+  Quick mode stops at 2^16 vertices; ``--full`` adds 2^17 and the
+  1M-vertex 2^20 point (the ISSUE-5 acceptance row: build + partition
+  + one round with builder RSS well under the materialized edge list).
+"""
 
 from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import time
 
 from repro.core import default_strategies, peak_accuracy
 
@@ -11,8 +33,13 @@ from .common import QUICK, FULL, emit, graph_for, quick_mode, \
 CLIENTS = (4, 6, 8)
 STRATS = ("E", "O", "OPP", "OPG")
 
+RMAT_SCALES_QUICK = (14, 16)          # 16k / 65k vertices
+RMAT_SCALES_FULL = (14, 16, 17, 20)   # ... 131k / 1M vertices
+EDGE_FACTOR = 8
+GP_CLIENTS = 8
 
-def main():
+
+def client_sweep() -> None:
     mode = QUICK if quick_mode() else FULL
     graphs = ("reddit",) if quick_mode() else ("reddit", "products")
     for gname in graphs:
@@ -24,12 +51,73 @@ def main():
                 _, stats = run_strategy(g, bs, strat, clients=k,
                                         rounds=mode["rounds"])
                 results[sname] = stats
-            target = min(peak_accuracy(s) for s in results.values()) - target_margin()
+            target = min(peak_accuracy(s)
+                         for s in results.values()) - target_margin()
             for sname, stats in results.items():
                 s = summarize(stats)
                 emit(f"scaling/{gname}/k{k}/{sname}", s,
                      f"peak={s['peak_acc']:.4f};"
                      f"tta_s={tta(stats, target):.2f}")
+
+
+def graphplane_sweep() -> None:
+    scales = RMAT_SCALES_QUICK if quick_mode() else RMAT_SCALES_FULL
+    for scale in scales:
+        out = tempfile.mkdtemp(prefix=f"bench_rmat{scale}_")
+        try:
+            proc = subprocess.run(
+                [sys.executable, "-m", "repro.launch.build_store",
+                 "--out", out, "--rmat-scale", str(scale),
+                 "--edge-factor", str(EDGE_FACTOR),
+                 "--graph-seed", "1", "--seed", "0",
+                 "--clients", str(GP_CLIENTS)],
+                capture_output=True, text=True,
+                env={**os.environ,
+                     "PYTHONPATH": "src" + os.pathsep
+                     + os.environ.get("PYTHONPATH", "")})
+            if proc.returncode != 0:
+                print(f"graphplane/rmat{scale}: build_store failed "
+                      f"(rc={proc.returncode})\n{proc.stderr}",
+                      flush=True)
+                continue
+            st = json.loads(proc.stdout.strip().splitlines()[-1])
+            # RSS headroom vs the edge list the builder never held:
+            # symmetrized int64 (src, dst) pairs
+            edgelist_mb = st["num_edges"] * 16 / 1e6
+            emit(f"graphplane/rmat{scale}/build",
+                 {"median_round_s": st["build_s"]},
+                 f"edges={st['num_edges']};"
+                 f"edges_per_s={st['build_edges_per_s']};"
+                 f"build_rss_mb={st['build_peak_rss_mb']:.0f};"
+                 f"rss_mb={st['peak_rss_mb']:.0f};"
+                 f"edgelist_mb={edgelist_mb:.0f}")
+            emit(f"graphplane/rmat{scale}/partition",
+                 {"median_round_s": st["partition_s"]},
+                 f"vertices_per_s={st['partition_vertices_per_s']};"
+                 f"boundary={st['boundary_pull_nodes']};"
+                 f"shard_s={st['shard_s']}")
+
+            from repro.fedsvc.runtime import RunConfig
+            cfg = RunConfig(graph=f"store:{out}", num_clients=GP_CLIENTS,
+                            strategy="E", hidden=16, fanout=3,
+                            batch_size=32, epochs_per_round=1,
+                            rounds=1, seed=0)
+            tr = cfg.build_trainer()
+            t0 = time.perf_counter()
+            stats = tr.train(1)
+            t_round = time.perf_counter() - t0
+            emit(f"graphplane/rmat{scale}/round",
+                 {"median_round_s": t_round},
+                 f"modelled_s={stats[0].round_time:.3f};"
+                 f"acc={stats[0].accuracy:.4f};"
+                 f"stored={stats[0].embeddings_stored}")
+        finally:
+            shutil.rmtree(out, ignore_errors=True)
+
+
+def main():
+    client_sweep()
+    graphplane_sweep()
 
 
 if __name__ == "__main__":

@@ -30,6 +30,7 @@ class EmbeddingServer:
         self.hidden = hidden
         self.net = net or NetworkModel()
         self._row: dict[int, int] = {}         # global id -> row
+        self._next_row = 0                     # rows handed out so far
         self._cap = 0                          # allocated rows per table
         self._bufs: list[np.ndarray] = [
             np.zeros((0, hidden), np.float32) for _ in range(num_layers - 1)
@@ -50,7 +51,7 @@ class EmbeddingServer:
         grown = []
         for buf in self._bufs:
             g = np.zeros((new_cap, self.hidden), np.float32)
-            g[: len(self._row)] = buf[: len(self._row)]
+            g[: self._next_row] = buf[: self._next_row]
             grown.append(g)
         self._bufs = grown
         self._cap = new_cap
@@ -61,16 +62,25 @@ class EmbeddingServer:
         new = [int(g) for g in np.unique(global_ids) if int(g) not in self._row]
         if not new:
             return
-        base = len(self._row)
+        base = self._next_row
         self._ensure_capacity(base + len(new))
         for i, gid in enumerate(new):
             self._row[gid] = base + i
+        self._next_row = base + len(new)
+
+    def forget(self, global_ids: np.ndarray) -> None:
+        """Drop registrations (shard rebalancing moved the rows away).
+        Row slots are not recycled — registration is append-only, so a
+        forget leaves a hole that only costs capacity, never
+        correctness (``register`` hands out fresh rows past it)."""
+        for g in np.unique(global_ids):
+            self._row.pop(int(g), None)
 
     @property
     def _tables(self) -> list[np.ndarray]:
-        """Logical (registered-rows) views of the capacity buffers.
+        """Logical (allocated-rows) views of the capacity buffers.
         Writes through a view hit the backing buffer."""
-        n = len(self._row)
+        n = self._next_row
         return [buf[:n] for buf in self._bufs]
 
     @property

@@ -134,6 +134,9 @@ class FederatedGNNTrainer:
         transport_addrs: list | None = None,
         seed: int = 0,
         part: np.ndarray | None = None,
+        shards: list[ClientShard | None] | None = None,
+        only_clients: list[int] | None = None,
+        eval_max_edges: int = 4_000_000,
     ):
         self.g = graph
         self.k = num_clients
@@ -154,70 +157,132 @@ class FederatedGNNTrainer:
         # = "tcp", or inferred when addresses are given)
         self.transport_addrs = transport_addrs
         self.seed = seed
-        self.rng = np.random.default_rng(seed)
-        self.part = bfs_partition(graph, num_clients, seed=seed) \
-            if part is None else part
+        # shard-local mode (fedsvc workers): build samplers / caches /
+        # exchange registrations only for the owned clients; with
+        # prebuilt ``shards`` (an mmap store's shard dir) the graph is
+        # never re-scanned either.
+        self.only_clients = None if only_clients is None \
+            else sorted(int(c) for c in only_clients)
+        self._prebuilt_shards = shards
+        self.eval_max_edges = eval_max_edges
+        if part is None:
+            if getattr(graph, "is_store", False):
+                # out-of-core plane: single-pass streaming LDG instead
+                # of the O(V)-frontier BFS grow
+                from repro.graphstore import ldg_partition
+                part = ldg_partition(graph, num_clients, seed=seed)
+            else:
+                part = bfs_partition(graph, num_clients, seed=seed)
+        self.part = part
         self._setup()
 
     # -- setup ----------------------------------------------------------------
 
+    def _client_rng(self, ci: int, salt: int) -> np.random.Generator:
+        """Per-(client, purpose) generator for the R25-style random
+        subset draws: seeded independently of build order, so a
+        shard-local worker (only_clients=...) draws the same subsets as
+        the full in-process trainer."""
+        return np.random.default_rng((self.seed, salt, ci))
+
+    def _build_shards(self, limit, retained_remote=None
+                      ) -> list[ClientShard]:
+        """Shard extraction, dispatched per graph plane: streaming over
+        an mmap store, materialized for an in-memory Graph — outputs are
+        bit-identical (gated in tests/test_graphstore.py)."""
+        from repro.graphstore import build_client_shards
+        return build_client_shards(
+            self.g, self.part, retention_limit=limit,
+            retained_remote=retained_remote, seed=self.seed)
+
     def _setup(self) -> None:
         st = self.strategy
         limit = 0 if not st.use_embeddings else st.retention_limit
-        shards = make_client_shards(self.g, self.part,
-                                    retention_limit=limit, seed=self.seed)
+        self.owned = list(range(self.k)) if self.only_clients is None \
+            else self.only_clients
+        if self._prebuilt_shards is not None:
+            # prebuilt (mmap'd) shards: a worker never re-scans the
+            # graph.  Score-based pruning still applies, shard-locally.
+            shards = list(self._prebuilt_shards)
+            if st.use_embeddings and st.scored_prune_frac is not None:
+                from repro.graphs.partition import filter_shard_remote
+                for ci in self.owned:
+                    sh = shards[ci]
+                    scores = score_remote_nodes(sh, st.score_kind, self.L)
+                    keep = top_fraction(scores, st.scored_prune_frac,
+                                        rng=self._client_rng(ci, 1),
+                                        random_subset=st.random_subset)
+                    shards[ci] = filter_shard_remote(
+                        sh, sh.pull_nodes[keep])
+        else:
+            # NOTE: without prebuilt shards every client's shard is
+            # extracted (the reciprocal push recompute below needs all
+            # pull sets), so this fallback holds O(E) shard edges even
+            # under only_clients — bake shards with launch/build_store
+            # for stores where that matters.
+            shards = self._build_shards(limit)
 
-        # score-based pruning (§4.1.2): keep top-f% pull nodes per client,
-        # scored on the (retention-pruned) expanded subgraph.  Same seed ⇒
-        # the same retention edges survive before the set filter applies.
-        if st.use_embeddings and st.scored_prune_frac is not None:
-            retained2 = {}
-            for sh in shards:
-                scores = score_remote_nodes(sh, st.score_kind, self.L)
-                keep = top_fraction(scores, st.scored_prune_frac,
-                                    rng=self.rng,
-                                    random_subset=st.random_subset)
-                retained2[sh.client_id] = sh.pull_nodes[keep]
-            shards = make_client_shards(self.g, self.part,
-                                        retention_limit=limit,
-                                        retained_remote=retained2,
-                                        seed=self.seed)
+            # score-based pruning (§4.1.2): keep top-f% pull nodes per
+            # client, scored on the (retention-pruned) expanded subgraph.
+            # Same seed ⇒ the same retention edges survive before the set
+            # filter applies.
+            if st.use_embeddings and st.scored_prune_frac is not None:
+                retained2 = {}
+                for sh in shards:
+                    scores = score_remote_nodes(sh, st.score_kind, self.L)
+                    keep = top_fraction(scores, st.scored_prune_frac,
+                                        rng=self._client_rng(sh.client_id, 1),
+                                        random_subset=st.random_subset)
+                    retained2[sh.client_id] = sh.pull_nodes[keep]
+                shards = self._build_shards(limit, retained_remote=retained2)
         self.shards = shards
 
         # push sets follow the *retained* pull sets: client k pushes exactly
         # the nodes other clients retained (pruning shrinks pushes, §4.1.1).
+        # Possible only when every shard is visible; a shard-local worker
+        # keeps the reciprocal sets stored at shard-build time (a superset
+        # under scored pruning — extra pushed rows are simply never read).
         part = self.part
-        for sh in shards:
-            wanted = [other.pull_nodes[part[other.pull_nodes] == sh.client_id]
-                      for other in shards if other.client_id != sh.client_id]
-            sh.push_nodes = np.unique(np.concatenate(wanted)) \
-                if wanted else np.zeros(0, np.int64)
+        if all(sh is not None for sh in shards):
+            for sh in shards:
+                wanted = [
+                    other.pull_nodes[part[other.pull_nodes] == sh.client_id]
+                    for other in shards if other.client_id != sh.client_id]
+                sh.push_nodes = np.unique(np.concatenate(wanted)) \
+                    if wanted else np.zeros(0, np.int64)
 
         # push-node local-row indices, hoisted: both push paths
         # (pretrain_round, _compute_push) used to rebuild the
         # global→local dict per client per round, O(num_local) each time.
-        self.push_rows: list[np.ndarray] = []
-        for sh in shards:
+        self.push_rows: list[np.ndarray | None] = [None] * self.k
+        for ci in self.owned:
+            sh = shards[ci]
             g2l = {int(g): i
                    for i, g in enumerate(sh.global_ids[:sh.num_local])}
-            self.push_rows.append(
+            self.push_rows[ci] = \
                 np.fromiter((g2l[int(g)] for g in sh.push_nodes),
-                            np.int64, len(sh.push_nodes)))
+                            np.int64, len(sh.push_nodes))
 
         # prefetch scores (§4.3) on the final expanded shard
-        self.prefetch_sets: list[np.ndarray] = []
-        for sh in shards:
+        self.prefetch_sets: list[np.ndarray | None] = [None] * self.k
+        for ci in self.owned:
+            sh = shards[ci]
             if st.use_embeddings and st.prefetch_frac is not None:
                 scores = score_remote_nodes(sh, st.score_kind, self.L)
-                idx = top_fraction(scores, st.prefetch_frac, rng=self.rng,
+                idx = top_fraction(scores, st.prefetch_frac,
+                                   rng=self._client_rng(ci, 2),
                                    random_subset=st.random_subset)
             else:
                 idx = np.arange(len(sh.pull_nodes))
-            self.prefetch_sets.append(idx)
+            self.prefetch_sets[ci] = idx
 
         # remote-embedding exchange: transport (embedding server shard(s)
         # behind modelled links) + one codec/delta-aware client per silo
         from repro.exchange import ExchangeClient, make_transport
+        if st.shard_placement not in ("hash", "pull_frequency"):
+            raise ValueError(
+                f"unknown shard_placement {st.shard_placement!r}; "
+                "expected hash | pull_frequency")
         if st.use_embeddings:
             self.exchange = make_transport(
                 self.L, self.hidden, kind=st.transport,
@@ -225,40 +290,71 @@ class FederatedGNNTrainer:
                 nets=self.shard_nets if self.shard_nets is not None
                 else self.net,
                 addrs=self.transport_addrs, codec=st.codec)
+            if st.shard_placement == "pull_frequency":
+                if not hasattr(self.exchange, "rebalance_by_pulls"):
+                    raise ValueError(
+                        "shard_placement='pull_frequency' needs the "
+                        "sharded in-process transport (num_server_shards "
+                        "> 1, transport != 'tcp'): "
+                        f"{type(self.exchange).__name__} cannot migrate "
+                        "rows")
+                self.exchange.track_pulls = True
             self.ex_clients: list[ExchangeClient | None] = [
+                None if shards[ci] is None else
                 ExchangeClient(self.exchange, st.codec,
                                delta_threshold=st.delta_threshold,
                                error_feedback=st.error_feedback)
-                for _ in shards
+                for ci in range(self.k)
             ]
-            for sh in shards:
-                self.exchange.register(sh.pull_nodes)
-                self.exchange.register(sh.push_nodes)
+            for ci in self.owned:
+                self.exchange.register(shards[ci].pull_nodes)
+                self.exchange.register(shards[ci].push_nodes)
         else:
             self.exchange = None
-            self.ex_clients = [None for _ in shards]
+            self.ex_clients = [None] * self.k
 
-        self.samplers = [
-            NeighborSampler(sh, self.fanout, self.L, self.batch_size,
-                            seed=self.seed)
-            for sh in shards
-        ]
-        self.shard_arrays = [gnn.shard_to_arrays(sh) for sh in shards]
-        self.feats = [jnp.asarray(sh.features, jnp.float32) for sh in shards]
-        self.labels = [jnp.asarray(sh.labels, jnp.int32) for sh in shards]
+        self.samplers: list[NeighborSampler | None] = [None] * self.k
+        self.shard_arrays: list[dict | None] = [None] * self.k
+        self.feats = [None] * self.k
+        self.labels = [None] * self.k
+        for ci in self.owned:
+            sh = shards[ci]
+            self.samplers[ci] = NeighborSampler(
+                sh, self.fanout, self.L, self.batch_size, seed=self.seed)
+            self.shard_arrays[ci] = gnn.shard_to_arrays(sh)
+            self.feats[ci] = jnp.asarray(sh.features, jnp.float32)
+            self.labels[ci] = jnp.asarray(sh.labels, jnp.int32)
 
         # global eval graph (aggregation server's held-out test set):
-        # full-neighbourhood forward over the whole graph.
-        e_dst = np.repeat(np.arange(self.g.num_vertices),
-                          np.diff(self.g.indptr))
-        self.eval_arrays = {
-            "edge_src": jnp.asarray(self.g.indices, jnp.int32),
-            "edge_dst": jnp.asarray(e_dst, jnp.int32),
-            "src_is_remote": jnp.zeros(self.g.num_edges, bool),
-            "num_local": self.g.num_vertices,
-            "features": jnp.asarray(self.g.features, jnp.float32),
-        }
-        self.test_idx = np.nonzero(~self.g.train_mask)[0]
+        # full-neighbourhood forward over the whole graph — or, past
+        # ``eval_max_edges``, over the largest vertex-prefix subgraph
+        # that fits (the informational eval for million-vertex stores).
+        # Shard-local workers never evaluate and skip the arrays.
+        if self.only_clients is None:
+            n_eval = self.g.num_vertices
+            if self.g.num_edges > self.eval_max_edges:
+                n_eval = max(1, int(np.searchsorted(
+                    self.g.indptr, self.eval_max_edges, side="right")) - 1)
+            e_lim = int(self.g.indptr[n_eval])
+            e_src = np.asarray(self.g.indices[:e_lim], dtype=np.int64)
+            e_dst = np.repeat(np.arange(n_eval),
+                              np.diff(np.asarray(self.g.indptr[:n_eval + 1])))
+            if n_eval < self.g.num_vertices:     # drop out-of-prefix srcs
+                keep = e_src < n_eval
+                e_src, e_dst = e_src[keep], e_dst[keep]
+            self.eval_arrays = {
+                "edge_src": jnp.asarray(e_src, jnp.int32),
+                "edge_dst": jnp.asarray(e_dst, jnp.int32),
+                "src_is_remote": jnp.zeros(len(e_src), bool),
+                "num_local": n_eval,
+                "features": jnp.asarray(
+                    np.asarray(self.g.features[:n_eval]), jnp.float32),
+            }
+            self.test_idx = np.nonzero(
+                ~np.asarray(self.g.train_mask[:n_eval]))[0]
+        else:
+            self.eval_arrays = None
+            self.test_idx = None
 
         # model + jitted train step
         self.params = gnn.init_gnn(jax.random.PRNGKey(self.seed), self.conv,
@@ -274,7 +370,8 @@ class FederatedGNNTrainer:
             return params, opt_state, loss
 
         self._train_step = jax.jit(_step)
-        self._caches: list[list[jnp.ndarray]] = [
+        self._caches: list[list[jnp.ndarray] | None] = [
+            None if sh is None else
             [jnp.zeros((max(1, sh.num_remote), self.hidden), jnp.float32)
              for _ in range(self.L - 1)]
             for sh in shards
@@ -390,7 +487,7 @@ class FederatedGNNTrainer:
         clients, so order never matters)."""
         if self.exchange is None:
             return
-        for ci in (range(self.k) if client_ids is None else client_ids):
+        for ci in (self.owned if client_ids is None else client_ids):
             sh = self.shards[ci]
             if len(sh.push_nodes) == 0:
                 continue
@@ -401,6 +498,10 @@ class FederatedGNNTrainer:
             self.ex_clients[ci].push(sh.push_nodes, vals)
 
     def evaluate(self, params=None) -> float:
+        if self.eval_arrays is None:
+            raise RuntimeError(
+                "shard-local trainer (only_clients=...) has no eval "
+                "graph; evaluation belongs to the coordinator")
         outs = gnn.full_propagate(
             self.params if params is None else params,
             self.eval_arrays, None, conv=self.conv)
@@ -462,7 +563,19 @@ class FederatedGNNTrainer:
                 interference=st.overlap_interference, epochs=self.epochs))
 
     def run_round(self, round_idx: int, cum_time: float) -> RoundStats:
+        assert self.only_clients is None, \
+            "run_round needs every client; shard-local trainers drive " \
+            "client_round through the fedsvc control plane"
         self.set_round_tau(round_idx)
+        # pull-frequency shard rebalancing (ROADMAP): after the first
+        # round's pulls are logged, re-place hot rows across the
+        # embedding-server shards by observed pull counts (LPT) —
+        # numerics are untouched (row-independent codecs), only the
+        # per-shard time/byte ledgers move.
+        st = self.strategy
+        if st.use_embeddings and st.shard_placement == "pull_frequency" \
+                and round_idx == st.rebalance_round:
+            self.exchange.rebalance_by_pulls()
         phases = PhaseTimes()
         all_rpc_sizes: list[int] = []
 

@@ -40,6 +40,13 @@ class Strategy:
     # needs live embed_server listeners (repro.launch.embed_server) and
     # the trainer's transport_addrs pointing at them.
     transport: str = "auto"
+    # -- embedding-shard placement (ShardedTransport) ------------------------
+    # hash — static gid % S (historical).  pull_frequency — after round
+    # `rebalance_round` the transport re-places rows by observed per-gid
+    # pull counts (greedy LPT onto the least-loaded shard), falling back
+    # to hash placement for unseen ids or when no pulls were logged.
+    shard_placement: str = "hash"
+    rebalance_round: int = 1
     # EF-SGD style error feedback: accumulate the codec quantization
     # residual client-side and fold it into the next push, so lossy
     # codecs (fp16/int8) stop biasing converged embeddings.
@@ -127,6 +134,8 @@ class Strategy:
             bits.append(f"sample={self.sample_frac:g}")
         if self.num_server_shards > 1:
             bits.append(f"shards={self.num_server_shards}")
+        if self.shard_placement != "hash":
+            bits.append(f"place={self.shard_placement}")
         if self.transport != "auto":
             bits.append(f"wire={self.transport}")
         if self.retention_limit is not None:

@@ -21,6 +21,7 @@ into the shard TransferLogs.
 from __future__ import annotations
 
 import abc
+import heapq
 
 import numpy as np
 
@@ -156,10 +157,21 @@ class HashShardedWire:
     hidden: int
     nets: list[NetworkModel]
     _logs: list[TransferLog]
+    #: optional gid → shard override (pull-frequency rebalancing);
+    #: ids beyond the map, or mapped to -1, fall back to hashing
+    _placement: np.ndarray | None = None
 
     def shard_of(self, global_ids: np.ndarray) -> np.ndarray:
-        """Hash placement: vertex id → shard."""
-        return np.asarray(global_ids, np.int64) % self.num_shards
+        """Vertex id → shard: the placement map where one exists
+        (Strategy.shard_placement='pull_frequency'), else ``gid % S``."""
+        gids = np.asarray(global_ids, np.int64)
+        owner = gids % self.num_shards
+        pl = self._placement
+        if pl is not None and len(pl):
+            inb = gids < len(pl)
+            mapped = np.where(inb, pl[np.minimum(gids, len(pl) - 1)], -1)
+            owner = np.where(mapped >= 0, mapped, owner)
+        return owner
 
     def _split(self, global_ids: np.ndarray):
         """→ [(shard, positions-into-global_ids)] for non-empty shards."""
@@ -225,6 +237,65 @@ class ShardedTransport(HashShardedWire, Transport):
         self.shards = [EmbeddingServer(num_layers, hidden, net)
                        for net in self.nets]
         self._logs = [TransferLog() for _ in range(num_shards)]
+        #: per-gid gather tally, fed to rebalance_by_pulls.  Off by
+        #: default — the trainer flips it on for
+        #: Strategy.shard_placement='pull_frequency', so hash-placed
+        #: runs never pay the scatter on the gather hot path.
+        self.track_pulls = False
+        self._pull_counts = np.zeros(0, np.int64)
+
+    def _count_pulls(self, global_ids) -> None:
+        if not self.track_pulls:
+            return
+        gids = np.asarray(global_ids, np.int64)
+        if len(gids) == 0:
+            return
+        need = int(gids.max()) + 1
+        if need > len(self._pull_counts):
+            grown = np.zeros(max(need, 2 * len(self._pull_counts)),
+                             np.int64)
+            grown[: len(self._pull_counts)] = self._pull_counts
+            self._pull_counts = grown
+        np.add.at(self._pull_counts, gids, 1)
+
+    def rebalance_by_pulls(self) -> np.ndarray | None:
+        """Re-place rows by observed pull frequency (ROADMAP item).
+
+        Greedy LPT: hottest gid onto the least-loaded shard, load being
+        the pull mass already placed there — so two hot boundary
+        vertices that hash together stop serializing on one link.
+        Rows physically migrate between the shard servers; values are
+        untouched (codecs are row-independent), so numerics can never
+        change — only the per-shard byte/time ledgers.  Returns the new
+        placement map, or None (hash placement stays) when no pulls
+        were ever logged."""
+        counts = self._pull_counts
+        hot = np.nonzero(counts > 0)[0]
+        if len(hot) == 0:
+            return None
+        order = hot[np.argsort(-counts[hot], kind="stable")]
+        old_owner = self.shard_of(order)
+        placement = np.full(len(counts), -1, np.int32)
+        # LPT via a k-element heap: (load, shard) pops break ties on the
+        # lowest shard index, matching argmin semantics at O(log k)/gid
+        heap = [(0, s) for s in range(self.num_shards)]
+        for gid in order:
+            load, s = heapq.heappop(heap)
+            placement[gid] = s
+            heapq.heappush(heap, (load + int(counts[gid]), s))
+        new_owner = placement[order]
+        self._placement = placement
+        for s_old in range(self.num_shards):
+            moved = order[(old_owner == s_old) & (new_owner != s_old)]
+            if len(moved) == 0:
+                continue
+            vals = self.shards[s_old].gather(moved)
+            self.shards[s_old].forget(moved)
+            for s_new, pos in self._split(moved):
+                self.shards[s_new].register(moved[pos])
+                self.shards[s_new].write(moved[pos],
+                                         [v[pos] for v in vals])
+        return placement
 
     def register(self, global_ids):
         for s, pos in self._split(global_ids):
@@ -237,6 +308,7 @@ class ShardedTransport(HashShardedWire, Transport):
                                  [np.asarray(v)[pos] for v in layer_values])
 
     def gather(self, global_ids, layers=None):
+        self._count_pulls(global_ids)
         sel = list(range(1, self.num_layers)) if layers is None \
             else list(layers)
         global_ids = np.asarray(global_ids)

@@ -21,6 +21,11 @@ from repro.core import FederatedGNNTrainer, Strategy, default_strategies
 
 @dataclasses.dataclass
 class RunConfig:
+    #: synthetic preset name ("reddit", scaled by ``scale``/``graph_seed``)
+    #: or an out-of-core graph spec "store:<dir>" — a prebuilt mmap
+    #: GraphStore every participant opens read-only (its baked partition
+    #: / shard files make a worker load exactly its clients' shards
+    #: instead of regenerating the graph per process)
     graph: str = "reddit"
     scale: float = 0.05
     graph_seed: int = 3
@@ -50,17 +55,24 @@ class RunConfig:
         return dataclasses.replace(base, **over) if over else base
 
     def build_graph(self):
+        if self.graph.startswith("store:"):
+            from repro.graphstore import open_store
+            return open_store(self.graph[len("store:"):])
         from repro.graphs import make_graph
         return make_graph(self.graph, scale=self.scale,
                           seed=self.graph_seed)
 
-    def build_trainer(self, *, embeddings: Optional[bool] = None
+    def build_trainer(self, *, embeddings: Optional[bool] = None,
+                      only_clients: Optional[list] = None
                       ) -> FederatedGNNTrainer:
         """The full trainer a worker runs ``client_round`` on.  Pass
         ``embeddings=False`` for a participant that only needs model
         init + evaluation (the coordinator) — it skips the exchange and
         never touches the embed shards, while partition/model init stay
-        identical."""
+        identical.  ``only_clients`` builds samplers / caches /
+        registrations for just those clients (the fed_worker path); on a
+        ``store:`` graph with prebuilt shard files the worker then mmaps
+        only its own shards and never re-scans the graph."""
         st = self.build_strategy()
         if embeddings is False:
             st = dataclasses.replace(st, use_embeddings=False,
@@ -68,13 +80,27 @@ class RunConfig:
         addrs = self.embed_addrs or None
         if not st.use_embeddings or st.transport != "tcp":
             addrs = None
+        g = self.build_graph()
+        part, shards = None, None
+        if getattr(g, "is_store", False):
+            part = g.load_partition(self.num_clients, self.seed)
+            limit = st.retention_limit if st.use_embeddings else 0
+            if part is not None and \
+                    g.has_shards(self.num_clients, self.seed, limit):
+                owned = range(self.num_clients) if only_clients is None \
+                    else only_clients
+                shards = [None] * self.num_clients
+                for c in owned:
+                    shards[c] = g.load_shard(c, self.num_clients,
+                                             self.seed, limit)
         return FederatedGNNTrainer(
-            self.build_graph(), self.num_clients, st,
+            g, self.num_clients, st,
             conv=self.conv, num_layers=self.num_layers,
             hidden=self.hidden, fanout=self.fanout,
             batch_size=self.batch_size,
             epochs_per_round=self.epochs_per_round, lr=self.lr,
-            transport_addrs=addrs, seed=self.seed)
+            transport_addrs=addrs, seed=self.seed,
+            part=part, shards=shards, only_clients=only_clients)
 
     # -- (de)serialisation -------------------------------------------------
 

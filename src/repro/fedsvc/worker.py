@@ -102,7 +102,12 @@ class FedWorker:
             "worker-" + "-".join(str(c) for c in self.client_ids)
         self.scenario = scenario or WorkerScenario()
         self._rng = np.random.default_rng(self.scenario.seed)
-        self.trainer = trainer if trainer is not None else cfg.build_trainer()
+        # shard-local trainer: samplers / caches / exchange registrations
+        # only for the owned clients, and on a store: graph the worker
+        # mmaps just its own prebuilt shards (shared `trainer` instances
+        # — the in-thread deployments — keep their full build)
+        self.trainer = trainer if trainer is not None \
+            else cfg.build_trainer(only_clients=self.client_ids)
         st = self.trainer.strategy
         self.weight_codec: str | None = st.weight_codec
         self._wef: dict[int, LeafErrorFeedback] = {

@@ -20,54 +20,142 @@ import numpy as np
 from .graph import Graph
 
 
+def neighbours_of(indptr: np.ndarray, indices: np.ndarray,
+                  frontier: np.ndarray) -> np.ndarray:
+    """CSR range-gather: the concatenated in-neighbour lists of every
+    vertex in ``frontier``, without a per-vertex Python loop."""
+    starts = indptr[frontier]
+    cnt = indptr[frontier + 1] - starts
+    total = int(cnt.sum())
+    if total == 0:
+        return np.zeros(0, indices.dtype)
+    offs = np.cumsum(cnt) - cnt
+    pos = np.arange(total, dtype=np.int64) \
+        - np.repeat(offs, cnt) + np.repeat(starts, cnt)
+    return indices[pos]
+
+
+def ranks_within(groups: np.ndarray) -> np.ndarray:
+    """Rank of each element within its group value, preserving list
+    order — the ranked-admission primitive shared by the refinement
+    sweep here and the streaming LDG partitioner."""
+    order = np.argsort(groups, kind="stable")
+    gs = groups[order]
+    starts = np.r_[0, 1 + np.nonzero(np.diff(gs))[0]] \
+        if len(gs) else np.zeros(0, np.int64)
+    run = np.zeros(len(groups), np.int64)
+    run[starts] = 1
+    run = np.cumsum(run) - 1
+    r = np.empty(len(groups), dtype=np.int64)
+    r[order] = np.arange(len(groups)) - starts[run]
+    return r
+
+
+def _water_fill(sizes: np.ndarray, m: int) -> np.ndarray:
+    """Distribute ``m`` extra slots over parts, always topping up the
+    currently-smallest part (ties → lowest part index).  Returns the
+    per-part fill counts; the vectorized equivalent of ``m`` sequential
+    ``argmin(sizes)`` assignments (fuzz-pinned against that loop in
+    tests/test_graphs.py)."""
+    k = len(sizes)
+    fills = np.zeros(k, dtype=np.int64)
+    if m <= 0:
+        return fills
+    order = np.argsort(sizes, kind="stable")
+    s = sizes[order].astype(np.int64)
+    # raise the lowest j+1 parts to the level of part j+1: cumulative
+    # cost.  Equal sizes have zero diff, so searchsorted(side="right")
+    # pulls every part tied at the final level into the receiver set.
+    lift = np.cumsum(np.arange(1, k) * np.diff(s))
+    j = int(np.searchsorted(lift, m, side="right"))   # parts 0..j receive
+    base = m - (lift[j - 1] if j > 0 else 0)
+    level = s[j]
+    f = np.zeros(k, dtype=np.int64)
+    f[: j + 1] = level - s[: j + 1]
+    # `base` slots remain once everyone is level: sequential argmin now
+    # round-robins the receivers in PART-INDEX order (its tie-break),
+    # so whole extra laps go to all of them and the remainder to the
+    # lowest part ids among them — not to the previously-smallest.
+    nrecv = j + 1
+    f[:nrecv] += base // nrecv
+    rem = int(base % nrecv)
+    if rem:
+        lowest_ids = np.sort(order[:nrecv])[:rem]
+        fills[lowest_ids] += 1
+    fills[order] += f
+    return fills
+
+
 def bfs_partition(g: Graph, k: int, *, seed: int = 0) -> np.ndarray:
-    """BFS-grow ``k`` balanced parts, then greedily refine the edge cut."""
+    """Level-synchronous BFS-grown balanced parts + one vectorized
+    boundary-refinement sweep.
+
+    Fully CSR-sliced numpy: each part grows a whole BFS frontier per
+    step (capped at the balance target), leftovers are water-filled onto
+    the smallest parts, and the refinement pass moves every profitable
+    boundary vertex against a frozen snapshot of the partition, with
+    per-part in/out capacity enforced by ranked admission.  ~100×
+    faster than the per-vertex flood it replaces at 100k+ vertices;
+    ``tests/test_graphs.py`` pins it against a pure-Python reference of
+    the same algorithm."""
     rng = np.random.default_rng(seed)
     n = g.num_vertices
     target = (n + k - 1) // k
     part = np.full(n, -1, dtype=np.int32)
     sizes = np.zeros(k, dtype=np.int64)
     order = rng.permutation(n)
-    seeds = iter(order)
+    cursor = 0   # next seed candidate in `order`
 
     for p in range(k):
-        # find an unassigned seed
-        for s in seeds:
-            if part[s] < 0:
-                break
-        else:
+        while cursor < n and part[order[cursor]] >= 0:
+            cursor += 1
+        if cursor >= n:
             break
-        frontier = [int(s)]
-        while frontier and sizes[p] < target:
-            u = frontier.pop()
-            if part[u] >= 0:
-                continue
-            part[u] = p
-            sizes[p] += 1
-            for v in g.neighbours(u):
-                if part[v] < 0:
-                    frontier.append(int(v))
-    # leftovers → smallest part
-    for u in np.nonzero(part < 0)[0]:
-        p = int(np.argmin(sizes))
-        part[u] = p
-        sizes[p] += 1
+        frontier = order[cursor: cursor + 1].astype(np.int64)
+        while len(frontier) and sizes[p] < target:
+            room = int(target - sizes[p])
+            take, rest = frontier[:room], frontier[room:]
+            part[take] = p
+            sizes[p] += len(take)
+            if len(rest) or sizes[p] >= target:
+                break
+            nxt = np.unique(neighbours_of(g.indptr, g.indices, take))
+            frontier = nxt[part[nxt] < 0].astype(np.int64)
 
-    # one refinement sweep: move boundary vertices if it reduces the cut
-    # without unbalancing (size stays within ±10% of target).
+    # leftovers → water-fill onto the smallest parts (vertex-id order)
+    left = np.nonzero(part < 0)[0]
+    if len(left):
+        fills = _water_fill(sizes, len(left))
+        recv = np.argsort(sizes, kind="stable")
+        part[left] = np.repeat(recv, fills[recv]).astype(np.int32)
+        sizes += fills
+
+    # one vectorized refinement sweep against a frozen snapshot: move a
+    # boundary vertex to its majority-neighbour part when that strictly
+    # beats its current part, admitting moves in seeded-permutation
+    # order until the ±10% balance band (dest inflow / source outflow
+    # capacity) is exhausted.
     lo, hi = int(0.9 * target), int(1.1 * target) + 1
-    for u in rng.permutation(n):
-        nbrs = g.neighbours(u)
-        if len(nbrs) == 0:
-            continue
-        counts = np.bincount(part[nbrs], minlength=k)
-        best = int(np.argmax(counts))
-        cur = int(part[u])
-        if best != cur and counts[best] > counts[cur] and \
-                sizes[best] < hi and sizes[cur] > lo:
-            part[u] = best
-            sizes[cur] -= 1
-            sizes[best] += 1
+    deg = np.diff(g.indptr)
+    e_dst = np.repeat(np.arange(n, dtype=np.int64), deg)
+    # fused-index bincount: ~10× the throughput of an np.add.at scatter
+    cnt = np.bincount(e_dst * k + part[g.indices],
+                      minlength=n * k).reshape(n, k)
+    best = np.argmax(cnt, axis=1)
+    cur = part.astype(np.int64)
+    ar = np.arange(n)
+    cand = (best != cur) & (cnt[ar, best] > cnt[ar, cur]) \
+        & (sizes[best] < hi) & (sizes[cur] > lo) & (deg > 0)
+    prio = np.empty(n, dtype=np.int64)
+    prio[rng.permutation(n)] = np.arange(n)    # sweep order of the old loop
+    cand_idx = np.nonzero(cand)[0]
+    if len(cand_idx):
+        cand_idx = cand_idx[np.argsort(prio[cand_idx], kind="stable")]
+        dest, src = best[cand_idx], cur[cand_idx]
+        admit = (ranks_within(dest) < (hi - sizes)[dest]) \
+            & (ranks_within(src) < (sizes - lo)[src])
+        moved = cand_idx[admit]
+        part[moved] = best[moved].astype(np.int32)
     return part
 
 
@@ -141,6 +229,69 @@ def _retention_edge_mask(e_dst: np.ndarray, remote_mask: np.ndarray,
     return keep
 
 
+def assemble_shard(
+    g,
+    part: np.ndarray,
+    c: int,
+    e_src: np.ndarray,
+    e_dst: np.ndarray,
+    push: np.ndarray,
+    *,
+    retention_limit: Optional[int] = None,
+    retained_remote: Optional[dict[int, np.ndarray]] = None,
+    seed: int = 0,
+) -> ClientShard:
+    """Assemble one :class:`ClientShard` from the client's in-edge list.
+
+    ``e_src``/``e_dst`` are the global (src → dst) in-edges of client
+    ``c``'s local vertices in global CSR order (grouped by dst); the
+    full-graph path and the out-of-core streaming extractor
+    (``repro.graphstore``) both land here, so the shard bytes can never
+    diverge between the two graph planes.  ``g`` only needs the node
+    arrays (features/labels/train_mask) and ``num_classes`` — a
+    :class:`Graph` or an mmap-backed store both work.
+    """
+    rng = np.random.default_rng(seed + 104729 * c)
+    local = np.nonzero(part == c)[0].astype(np.int64)
+    remote_mask = part[e_src] != c
+    all_pull = np.unique(e_src[remote_mask])
+    if retention_limit is not None:
+        keep = _retention_edge_mask(e_dst, remote_mask,
+                                    retention_limit, rng)
+        e_src, e_dst = e_src[keep], e_dst[keep]
+        remote_mask = remote_mask[keep]
+    if retained_remote is not None:
+        keep_set = np.asarray(retained_remote.get(c, all_pull),
+                              dtype=np.int64)
+        keep = np.isin(e_src, keep_set) | ~remote_mask
+        e_src, e_dst = e_src[keep], e_dst[keep]
+        remote_mask = remote_mask[keep]
+    pull = np.unique(e_src[remote_mask])
+
+    g2l = np.full(len(part), -1, dtype=np.int64)
+    g2l[local] = np.arange(len(local))
+    g2l[pull] = len(local) + np.arange(len(pull))
+    order = np.argsort(e_dst, kind="stable")
+    e_src, e_dst = g2l[e_src[order]], g2l[e_dst[order]]
+    indptr = np.zeros(len(local) + 1, dtype=np.int64)
+    np.add.at(indptr, e_dst + 1, 1)
+    indptr = np.cumsum(indptr)
+    return ClientShard(
+        client_id=c,
+        indptr=indptr,
+        indices=e_src.astype(np.int32),
+        global_ids=np.concatenate([local, pull]),
+        num_local=len(local),
+        features=np.asarray(g.features[local]),
+        labels=np.asarray(g.labels[local]),
+        train_mask=np.asarray(g.train_mask[local]),
+        pull_nodes=pull,
+        push_nodes=push,
+        all_pull_nodes=all_pull,
+        num_classes=g.num_classes,
+    )
+
+
 def make_client_shards(
     g: Graph,
     part: np.ndarray,
@@ -156,6 +307,11 @@ def make_client_shards(
     GNN, None ⇒ P_inf / EmbC).  ``retained_remote`` optionally maps
     client → global ids of remote vertices to retain (score-based pruning,
     §4.1.2); both compose (limit first, then the vertex set filter).
+
+    Materializes the full O(E) edge array — right for in-memory graphs;
+    an mmap :class:`repro.graphstore.GraphStore` should go through
+    ``repro.graphstore.stream_client_shards`` (bit-identical output,
+    bounded memory).
     """
     k = int(part.max()) + 1
     deg = np.diff(g.indptr)
@@ -163,49 +319,47 @@ def make_client_shards(
     src_of_edge = g.indices.astype(np.int64)
     shards = []
     for c in range(k):
-        rng = np.random.default_rng(seed + 104729 * c)
-        local = np.nonzero(part == c)[0].astype(np.int64)
         e_mask = part[dst_of_edge] == c
         e_src, e_dst = src_of_edge[e_mask], dst_of_edge[e_mask]
-        remote_mask = part[e_src] != c
-        all_pull = np.unique(e_src[remote_mask])
-        if retention_limit is not None:
-            keep = _retention_edge_mask(e_dst, remote_mask,
-                                        retention_limit, rng)
-            e_src, e_dst = e_src[keep], e_dst[keep]
-            remote_mask = remote_mask[keep]
-        if retained_remote is not None:
-            keep_set = np.asarray(retained_remote.get(c, all_pull),
-                                  dtype=np.int64)
-            keep = np.isin(e_src, keep_set) | ~remote_mask
-            e_src, e_dst = e_src[keep], e_dst[keep]
-            remote_mask = remote_mask[keep]
-        pull = np.unique(e_src[remote_mask])
         # push nodes: local vertices that appear as in-neighbours on other
         # clients (symmetric graphs ⇒ out-edges mirror in-edges).
         other_dst = part[dst_of_edge] != c
         push = np.unique(src_of_edge[other_dst & (part[src_of_edge] == c)])
-
-        g2l = np.full(g.num_vertices, -1, dtype=np.int64)
-        g2l[local] = np.arange(len(local))
-        g2l[pull] = len(local) + np.arange(len(pull))
-        order = np.argsort(e_dst, kind="stable")
-        e_src, e_dst = g2l[e_src[order]], g2l[e_dst[order]]
-        indptr = np.zeros(len(local) + 1, dtype=np.int64)
-        np.add.at(indptr, e_dst + 1, 1)
-        indptr = np.cumsum(indptr)
-        shards.append(ClientShard(
-            client_id=c,
-            indptr=indptr,
-            indices=e_src.astype(np.int32),
-            global_ids=np.concatenate([local, pull]),
-            num_local=len(local),
-            features=g.features[local],
-            labels=g.labels[local],
-            train_mask=g.train_mask[local],
-            pull_nodes=pull,
-            push_nodes=push,
-            all_pull_nodes=all_pull,
-            num_classes=g.num_classes,
-        ))
+        shards.append(assemble_shard(
+            g, part, c, e_src, e_dst, push,
+            retention_limit=retention_limit,
+            retained_remote=retained_remote, seed=seed))
     return shards
+
+
+def filter_shard_remote(sh: ClientShard,
+                        keep_gids: np.ndarray) -> ClientShard:
+    """Shard-local §4.1.2 filter: drop remote in-edges whose source is
+    not in ``keep_gids`` and compact the pull slots.
+
+    Equivalent to rebuilding the shard with ``retained_remote`` (the
+    edge order, pull ordering and local→global maps all match the
+    full-graph rebuild), but needs only the shard itself — the
+    out-of-core plane uses it so a worker holding one mmap'd shard can
+    apply score-based pruning without re-scanning the graph."""
+    keep_set = np.asarray(keep_gids, dtype=np.int64)
+    e_dst = np.repeat(np.arange(sh.num_local), np.diff(sh.indptr))
+    e_src = sh.indices.astype(np.int64)
+    remote = e_src >= sh.num_local
+    src_gid = sh.global_ids[e_src]
+    keep = ~remote | np.isin(src_gid, keep_set)
+    e_src, e_dst = e_src[keep], e_dst[keep]
+    remote = remote[keep]
+    pull = np.unique(sh.global_ids[e_src[remote]])
+    # remap: locals keep their slots, surviving pulls compact after them
+    g2l = np.full(int(sh.global_ids.max()) + 1, -1, dtype=np.int64)
+    g2l[sh.global_ids[: sh.num_local]] = np.arange(sh.num_local)
+    g2l[pull] = sh.num_local + np.arange(len(pull))
+    e_src = g2l[sh.global_ids[e_src]]
+    indptr = np.zeros(sh.num_local + 1, dtype=np.int64)
+    np.add.at(indptr, e_dst + 1, 1)
+    indptr = np.cumsum(indptr)
+    return dataclasses.replace(
+        sh, indptr=indptr, indices=e_src.astype(np.int32),
+        global_ids=np.concatenate([sh.global_ids[: sh.num_local], pull]),
+        pull_nodes=pull)

@@ -22,8 +22,9 @@ from repro.graphs import bfs_partition, make_client_shards, make_graph
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: heavy control-plane deployments (multi-process "
-                   "CLI smokes, full multi-round thread deployments) — "
-                   "run in CI's control-plane job, not tier1")
+                   "CLI smokes, full multi-round thread deployments) and "
+                   "≥100k-vertex graph-plane builds — run in CI's "
+                   "control-plane / graph-plane jobs, not tier1")
 
 
 @pytest.fixture(scope="session")

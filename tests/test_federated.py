@@ -79,6 +79,39 @@ def test_retention_limits(small_graph):
     assert retention_pruned_sets(g, part, None) is None  # P_inf
 
 
+def _retention_reference(g, part, limit, seed):
+    """Per-vertex mirror of the vectorized retention rule: one uniform
+    priority per edge, each boundary vertex keeps its ``limit``
+    lowest-priority remote in-neighbours."""
+    rng = np.random.default_rng(seed)
+    prio = rng.random(g.num_edges)
+    k = int(part.max()) + 1
+    out = {c: set() for c in range(k)}
+    for u in range(g.num_vertices):
+        c = int(part[u])
+        lo, hi = int(g.indptr[u]), int(g.indptr[u + 1])
+        nbrs = g.indices[lo:hi].astype(np.int64)
+        pr = prio[lo:hi]
+        rem = part[nbrs] != c
+        rnb, rpr = nbrs[rem], pr[rem]
+        keep = rnb if len(rnb) <= limit else rnb[np.argsort(rpr)[:limit]]
+        out[c].update(int(v) for v in keep)
+    return {c: np.array(sorted(v), dtype=np.int64) for c, v in out.items()}
+
+
+@pytest.mark.parametrize("limit,seed", [(1, 0), (3, 0), (4, 9)])
+def test_retention_pruned_sets_matches_reference(small_graph, limit, seed):
+    """The vectorized retention_pruned_sets is output-identical to the
+    per-vertex reference for fixed seeds (ISSUE-5 satellite gate)."""
+    g = small_graph
+    part = bfs_partition(g, 4, seed=0)
+    got = retention_pruned_sets(g, part, limit, seed=seed)
+    want = _retention_reference(g, part, limit, seed)
+    assert set(got) == set(want)
+    for c in got:
+        np.testing.assert_array_equal(got[c], want[c])
+
+
 def test_frequency_scores_range_and_signal(small_shards):
     shards, _ = small_shards
     sh = shards[0]

@@ -28,6 +28,104 @@ def test_presets_statistics():
     assert g.train_mask.mean() > a.train_mask.mean() * 0.8
 
 
+def _bfs_partition_reference(g, k, seed):
+    """Per-vertex Python mirror of the vectorized bfs_partition: same
+    level-synchronous growth, water-filled leftovers, and frozen-
+    snapshot ranked-admission refinement — the fixed-seed parity oracle
+    for the CSR-sliced rewrite."""
+    rng = np.random.default_rng(seed)
+    n = g.num_vertices
+    target = (n + k - 1) // k
+    part = np.full(n, -1, dtype=np.int32)
+    sizes = np.zeros(k, dtype=np.int64)
+    order = rng.permutation(n)
+    cursor = 0
+    for p in range(k):
+        while cursor < n and part[order[cursor]] >= 0:
+            cursor += 1
+        if cursor >= n:
+            break
+        frontier = [int(order[cursor])]
+        while frontier and sizes[p] < target:
+            room = int(target - sizes[p])
+            take, rest = frontier[:room], frontier[room:]
+            for u in take:
+                part[u] = p
+            sizes[p] += len(take)
+            if rest or sizes[p] >= target:
+                break
+            nxt = sorted({int(v) for u in take for v in g.neighbours(u)})
+            frontier = [v for v in nxt if part[v] < 0]
+    # leftovers: sequential-argmin fill counts, handed out to parts in
+    # initial-size order, leftover vertices in id order
+    left = np.nonzero(part < 0)[0]
+    if len(left):
+        fills = np.zeros(k, dtype=np.int64)
+        s = sizes.copy()
+        for _ in range(len(left)):
+            p = int(np.argmin(s))
+            fills[p] += 1
+            s[p] += 1
+        recv = np.argsort(sizes, kind="stable")
+        seq = [p for p in recv for _ in range(fills[p])]
+        for u, p in zip(left, seq):
+            part[u] = p
+        sizes += fills
+    # frozen-snapshot refinement with ranked admission
+    lo, hi = int(0.9 * target), int(1.1 * target) + 1
+    cnt = np.zeros((n, k), dtype=np.int64)
+    for u in range(n):
+        for v in g.neighbours(u):
+            cnt[u, part[v]] += 1
+    best = np.argmax(cnt, axis=1)
+    prio = np.empty(n, dtype=np.int64)
+    prio[rng.permutation(n)] = np.arange(n)
+    cand = [u for u in range(n)
+            if len(g.neighbours(u)) and best[u] != part[u]
+            and cnt[u, best[u]] > cnt[u, part[u]]
+            and sizes[best[u]] < hi and sizes[part[u]] > lo]
+    cand.sort(key=lambda u: prio[u])
+    seen_dst = np.zeros(k, dtype=np.int64)
+    seen_src = np.zeros(k, dtype=np.int64)
+    moves = []
+    for u in cand:
+        d, s_ = int(best[u]), int(part[u])
+        if seen_dst[d] < hi - sizes[d] and seen_src[s_] < sizes[s_] - lo:
+            moves.append((u, d))
+        seen_dst[d] += 1
+        seen_src[s_] += 1
+    for u, d in moves:
+        part[u] = d
+    return part
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 9), st.integers(0, 100), st.integers(0, 10_000))
+def test_water_fill_matches_sequential_argmin(k, m, seed):
+    """_water_fill's claimed semantics: exactly m sequential
+    argmin(sizes) assignments (ties → lowest part index)."""
+    from repro.graphs.partition import _water_fill
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(0, 30, size=k).astype(np.int64)
+    got = _water_fill(sizes.copy(), m)
+    f = np.zeros(k, np.int64)
+    s = sizes.copy()
+    for _ in range(m):
+        p = int(np.argmin(s))
+        f[p] += 1
+        s[p] += 1
+    np.testing.assert_array_equal(got, f)
+
+
+@pytest.mark.parametrize("k,seed", [(2, 0), (4, 0), (3, 5)])
+def test_bfs_partition_matches_reference(small_graph, k, seed):
+    """The vectorized bfs_partition is output-identical to the
+    per-vertex reference for fixed seeds (ISSUE-5 satellite gate)."""
+    got = bfs_partition(small_graph, k, seed=seed)
+    want = _bfs_partition_reference(small_graph, k, seed)
+    np.testing.assert_array_equal(got, want)
+
+
 def test_bfs_partition_balanced_and_better_than_hash(small_graph):
     g = small_graph
     for k in (2, 4):
