@@ -8,8 +8,8 @@ in EXPERIMENTS.md.  The roofline section reads results/dryrun.json — run
 
 from __future__ import annotations
 
-from . import (bench_exchange, bench_fanout, bench_fedopt, bench_pull,
-               bench_retention, bench_round_time, bench_scaling,
+from . import (bench_exchange, bench_fanout, bench_fedopt, bench_gnnserve,
+               bench_pull, bench_retention, bench_round_time, bench_scaling,
                bench_scoring, bench_tta, roofline)
 
 
@@ -25,6 +25,7 @@ def main() -> None:
         (bench_fanout, "Fig14 fanout"),
         (bench_exchange, "Beyond-paper: exchange codec x delta x shards"),
         (bench_fedopt, "Beyond-paper: federated LLM delta pruning/overlap"),
+        (bench_gnnserve, "Beyond-paper: serving plane open-loop latency"),
         (roofline, "Roofline (deliverable g)"),
     ):
         print(f"# --- {tag} ---", flush=True)

@@ -13,6 +13,13 @@ The exchange subsystem (repro.exchange) uses the *storage* surface only
 (``register``/``write``/``gather``) and does its own codec-aware wire
 accounting per transport shard; the classic ``push``/``pull`` RPC surface
 remains for direct single-server use.
+
+Row versions: every row carries a monotonically increasing version
+counter, bumped by ``write`` (so a τ-delta push bumps exactly the rows
+it selected).  ``versions``/``gather_if_stale`` let a serving-side cache
+validate held rows for the cost of 8 B/row instead of re-pulling whole
+embeddings — a cached row is valid precisely while the server hasn't
+accepted a delta for it.
 """
 
 from __future__ import annotations
@@ -35,6 +42,7 @@ class EmbeddingServer:
         self._bufs: list[np.ndarray] = [
             np.zeros((0, hidden), np.float32) for _ in range(num_layers - 1)
         ]
+        self._ver = np.zeros(0, np.int64)      # per-row write counter
         self._reallocs = 0                     # growth events (O(log n))
         self.log = TransferLog()
 
@@ -54,6 +62,9 @@ class EmbeddingServer:
             g[: self._next_row] = buf[: self._next_row]
             grown.append(g)
         self._bufs = grown
+        ver = np.zeros(new_cap, np.int64)
+        ver[: self._next_row] = self._ver[: self._next_row]
+        self._ver = ver
         self._cap = new_cap
         self._reallocs += 1
 
@@ -120,6 +131,7 @@ class EmbeddingServer:
         rows = self._rows(global_ids)
         for buf, vals in zip(self._bufs, layer_values):
             buf[rows] = np.asarray(vals, np.float32)
+        self._ver[rows] += 1
 
     def gather(self, global_ids: np.ndarray,
                layers: list[int] | None = None) -> list[np.ndarray]:
@@ -132,6 +144,36 @@ class EmbeddingServer:
         rows = self._rows(global_ids)
         # fancy indexing already allocates fresh arrays — no copy needed
         return [self._bufs[l - 1][rows] for l in sel]
+
+    def versions(self, global_ids: np.ndarray) -> np.ndarray:
+        """Current write counters for ``global_ids`` (int64, one per row
+        — ``write`` always touches all L-1 layers of a row together, so
+        one counter covers them all)."""
+        if len(global_ids) == 0:
+            return np.zeros(0, np.int64)
+        return self._ver[self._rows(global_ids)].copy()
+
+    def gather_if_stale(
+        self, global_ids: np.ndarray, have_versions: np.ndarray,
+        layers: list[int] | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, list[np.ndarray]]:
+        """Conditional gather (If-None-Match): return current versions
+        for all requested rows but row *values* only where the caller's
+        ``have_versions`` entry is out of date (use -1 for "never seen").
+
+        Returns ``(versions, stale_pos, layer_values)`` where
+        ``stale_pos`` indexes into ``global_ids`` and ``layer_values[j]``
+        holds the selected layer's rows for exactly those positions, in
+        ``stale_pos`` order."""
+        sel = list(range(1, self.L)) if layers is None else list(layers)
+        if len(global_ids) == 0:
+            return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                    [np.zeros((0, self.hidden), np.float32) for _ in sel])
+        rows = self._rows(global_ids)
+        ver = self._ver[rows].copy()
+        stale = np.nonzero(ver != np.asarray(have_versions, np.int64))[0]
+        vals = [self._bufs[l - 1][rows[stale]] for l in sel]
+        return ver, stale.astype(np.int64), vals
 
     # -- RPC surface ---------------------------------------------------------
 

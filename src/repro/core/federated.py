@@ -114,6 +114,50 @@ def peak_accuracy(stats: list[RoundStats]) -> float:
     return max(s.accuracy for s in stats) if stats else 0.0
 
 
+def sampled_eval_vertices(g, max_edges: int, seed: int) -> np.ndarray:
+    """Seeded uniform vertex sample whose in-edge mass fits ``max_edges``.
+
+    The unbiased replacement for the old vertex-*prefix* fallback: a
+    prefix inherits whatever ordering the store was built with (RMAT
+    hubs first, SBM blocks contiguous), so prefix accuracy estimates a
+    different population than the full graph.  A uniform permutation
+    prefix estimates the same one.  Always returns ≥ 1 vertex, sorted
+    ascending."""
+    deg = np.diff(np.asarray(g.indptr))
+    rng = np.random.default_rng((seed, 104729))
+    perm = rng.permutation(g.num_vertices)
+    k = int(np.searchsorted(np.cumsum(deg[perm]), max_edges, side="right"))
+    return np.sort(perm[: max(1, k)]).astype(np.int64)
+
+
+def eval_arrays_for(g, sel: np.ndarray) -> dict:
+    """``full_propagate`` inputs over the subgraph induced by the sorted
+    vertex selection ``sel`` (edges with both endpoints selected, ids
+    remapped to positions in ``sel``).  With ``sel == arange(V)`` this
+    reproduces the exact full-graph arrays bit-for-bit."""
+    indptr = np.asarray(g.indptr)
+    starts = indptr[sel]
+    counts = (indptr[sel + 1] - starts).astype(np.int64)
+    total = int(counts.sum())
+    # CSR range-gather: positions of every selected vertex's in-edges
+    offsets = np.zeros(len(sel) + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    pos = (np.arange(total, dtype=np.int64)
+           - np.repeat(offsets[:-1], counts) + np.repeat(starts, counts))
+    e_src = np.asarray(g.indices[pos], dtype=np.int64)
+    e_dst = np.repeat(np.arange(len(sel), dtype=np.int64), counts)
+    # drop edges whose source is outside the selection, remap the rest
+    loc = np.minimum(np.searchsorted(sel, e_src), len(sel) - 1)
+    keep = sel[loc] == e_src
+    return {
+        "edge_src": jnp.asarray(loc[keep], jnp.int32),
+        "edge_dst": jnp.asarray(e_dst[keep], jnp.int32),
+        "src_is_remote": jnp.zeros(int(keep.sum()), bool),
+        "num_local": len(sel),
+        "features": jnp.asarray(np.asarray(g.features[sel]), jnp.float32),
+    }
+
+
 class FederatedGNNTrainer:
     def __init__(
         self,
@@ -327,32 +371,23 @@ class FederatedGNNTrainer:
 
         # global eval graph (aggregation server's held-out test set):
         # full-neighbourhood forward over the whole graph — or, past
-        # ``eval_max_edges``, over the largest vertex-prefix subgraph
-        # that fits (the informational eval for million-vertex stores).
+        # ``eval_max_edges``, over a seeded uniform vertex sample whose
+        # induced edges fit the budget (the unbiased estimator for
+        # million-vertex stores; the old vertex-prefix fallback skewed
+        # toward whatever the store's build order put first).
         # Shard-local workers never evaluate and skip the arrays.
         if self.only_clients is None:
-            n_eval = self.g.num_vertices
             if self.g.num_edges > self.eval_max_edges:
-                n_eval = max(1, int(np.searchsorted(
-                    self.g.indptr, self.eval_max_edges, side="right")) - 1)
-            e_lim = int(self.g.indptr[n_eval])
-            e_src = np.asarray(self.g.indices[:e_lim], dtype=np.int64)
-            e_dst = np.repeat(np.arange(n_eval),
-                              np.diff(np.asarray(self.g.indptr[:n_eval + 1])))
-            if n_eval < self.g.num_vertices:     # drop out-of-prefix srcs
-                keep = e_src < n_eval
-                e_src, e_dst = e_src[keep], e_dst[keep]
-            self.eval_arrays = {
-                "edge_src": jnp.asarray(e_src, jnp.int32),
-                "edge_dst": jnp.asarray(e_dst, jnp.int32),
-                "src_is_remote": jnp.zeros(len(e_src), bool),
-                "num_local": n_eval,
-                "features": jnp.asarray(
-                    np.asarray(self.g.features[:n_eval]), jnp.float32),
-            }
+                sel = sampled_eval_vertices(self.g, self.eval_max_edges,
+                                            self.seed)
+            else:
+                sel = np.arange(self.g.num_vertices, dtype=np.int64)
+            self.eval_gids = sel
+            self.eval_arrays = eval_arrays_for(self.g, sel)
             self.test_idx = np.nonzero(
-                ~np.asarray(self.g.train_mask[:n_eval]))[0]
+                ~np.asarray(self.g.train_mask[sel]))[0]
         else:
+            self.eval_gids = None
             self.eval_arrays = None
             self.test_idx = None
 
@@ -497,6 +532,45 @@ class FederatedGNNTrainer:
             vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
             self.ex_clients[ci].push(sh.push_nodes, vals)
 
+    def export_for_serving(self) -> dict:
+        """Publish the trained state for the serving plane (gnnserve).
+
+        Training only ever stores the reciprocal push-node rows; a
+        query can land on *any* vertex, so this registers every owned
+        shard's local vertices with the exchange and pushes their full
+        h^1..h^{L-1} (full-neighbourhood propagate against the current
+        caches).  Rows cross the wire through a plain
+        :class:`ExchangeClient` — the codec applies and row versions
+        bump, but delta shadows / error-feedback residuals are left
+        untouched (serving must not perturb a resumable trainer).
+
+        Returns the bundle ``gnnserve.engine.build_serving`` consumes.
+        """
+        if self.exchange is None:
+            raise RuntimeError("export_for_serving needs an embedding-"
+                               "sharing strategy (use_embeddings=True)")
+        from repro.exchange import ExchangeClient
+        pub = ExchangeClient(self.exchange, self.strategy.codec)
+        for ci in self.owned:
+            sh = self.shards[ci]
+            self._fill_cache(ci)
+            outs = gnn.full_propagate(self.params, self.shard_arrays[ci],
+                                      self._caches[ci], conv=self.conv)
+            gids = np.asarray(sh.global_ids[:sh.num_local], np.int64)
+            pub.register(gids)
+            pub.push(gids, [np.asarray(outs[l])
+                            for l in range(self.L - 1)])
+        return {
+            "params": self.params,
+            "conv": self.conv,
+            "num_layers": self.L,
+            "hidden": self.hidden,
+            "part": np.asarray(self.part),
+            "shards": {ci: self.shards[ci] for ci in self.owned},
+            "transport": self.exchange,
+            "codec": self.strategy.codec,
+        }
+
     def evaluate(self, params=None) -> float:
         if self.eval_arrays is None:
             raise RuntimeError(
@@ -506,8 +580,8 @@ class FederatedGNNTrainer:
             self.params if params is None else params,
             self.eval_arrays, None, conv=self.conv)
         pred = np.asarray(jnp.argmax(outs[-1], axis=-1))
-        return float((pred[self.test_idx] ==
-                      self.g.labels[self.test_idx]).mean())
+        truth = np.asarray(self.g.labels[self.eval_gids[self.test_idx]])
+        return float((pred[self.test_idx] == truth).mean())
 
     def client_round(self, ci: int, params=None, *,
                      fill_cache: bool = True) -> ClientRoundResult:

@@ -105,6 +105,27 @@ class ExchangeClient:
         repeat across layers)."""
         return self.transport.account(global_ids, 1, self.bytes_per_scalar)
 
+    def pull_versioned(
+        self, global_ids: np.ndarray, have_versions: np.ndarray,
+        layers: list[int] | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, list[np.ndarray], float]:
+        """Conditional GET for serving-side caches: row values cross the
+        wire only where the server's version differs from
+        ``have_versions`` (-1 = never seen).  Only those rows are
+        charged.  Returns ``(versions, stale_pos, stale_values, time)``
+        with stale_values post-wire (codec roundtrip on modelled
+        transports, same discipline as :meth:`peek`)."""
+        ver, stale, vals = self.transport.gather_versioned(
+            global_ids, have_versions, layers)
+        if not self.transport.wire_is_real:
+            vals = [self.codec.roundtrip(v) for v in vals]
+        else:
+            vals = [np.asarray(v, np.float32) for v in vals]
+        n_layers = len(vals) if layers is None else len(list(layers))
+        t = self.transport.account(np.asarray(global_ids)[stale], n_layers,
+                                   self.bytes_per_scalar)
+        return ver, stale, vals, t
+
     # -- push side ---------------------------------------------------------
 
     def plan_push(self, global_ids: np.ndarray,

@@ -317,6 +317,51 @@ class TcpTransport(HashShardedWire, Transport):
                          fanout=len(parts))
         return out
 
+    def gather_versioned(self, global_ids, have_versions, layers=None):
+        sel = list(range(1, self.num_layers)) if layers is None \
+            else list(layers)
+        global_ids = np.asarray(global_ids)
+        have = np.asarray(have_versions, np.int64)
+        empty = [np.zeros((0, self.hidden), np.float32) for _ in sel]
+        if len(global_ids) == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64), empty
+        name = self.codec.name
+        parts = self._split(global_ids)
+        reqs = [(s, wire.build_vgather(name, global_ids[pos], have[pos], sel))
+                for s, pos in parts]
+        resps = self._rpc_many(reqs)
+        ver = np.zeros(len(global_ids), np.int64)
+        stale_parts, val_parts = [], []
+        for (s, pos), (_, body), (resp, dt) in zip(parts, reqs, resps):
+            payload = wire.parse_response(resp)
+            n = len(pos)
+            v = np.frombuffer(payload, np.int64, n).copy()
+            ver[pos] = v
+            # both ends recompute the stale set from the version vectors
+            st = np.nonzero(v != have[pos])[0]
+            block = wire.payload_nbytes(name, len(st), self.hidden)
+            blob = payload[n * 8:]
+            if len(blob) != block * len(sel):
+                raise ConnectionError(
+                    f"vgather reply from shard {s} carries {len(blob)} B "
+                    f"of rows, expected {block * len(sel)} B "
+                    f"({len(st)} stale rows × {len(sel)} layers)")
+            vals = [np.asarray(self.codec.decode(wire.decode_block(
+                        name, blob[i * block:(i + 1) * block],
+                        len(st), self.hidden)), np.float32)
+                    for i in range(len(sel))]
+            stale_parts.append(pos[st])
+            val_parts.append(vals)
+            self._record("vgather", s, len(st), len(sel), len(blob),
+                         wire.frame_nbytes(len(body))
+                         + wire.frame_nbytes(len(resp)), dt,
+                         fanout=len(parts))
+        stale = np.concatenate(stale_parts).astype(np.int64)
+        order = np.argsort(stale, kind="stable")
+        vals = [np.concatenate([vp[j] for vp in val_parts], axis=0)[order]
+                for j in range(len(sel))]
+        return ver, stale[order], vals
+
     # -- telemetry ---------------------------------------------------------
 
     @property

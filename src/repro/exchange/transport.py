@@ -56,6 +56,19 @@ class Transport(abc.ABC):
                layers: list[int] | None = None) -> list[np.ndarray]:
         """Raw read (no accounting), original id order."""
 
+    @abc.abstractmethod
+    def gather_versioned(
+        self, global_ids: np.ndarray, have_versions: np.ndarray,
+        layers: list[int] | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, list[np.ndarray]]:
+        """Conditional gather for serving-side caches (no accounting).
+
+        ``have_versions[i]`` is the caller's cached row version for
+        ``global_ids[i]`` (-1 = never seen).  Returns ``(versions,
+        stale_pos, layer_values)``: current versions for every id,
+        positions whose rows were out of date, and the selected layers'
+        rows for exactly those positions in ``stale_pos`` order."""
+
     # -- modelled wire -----------------------------------------------------
 
     @abc.abstractmethod
@@ -115,6 +128,9 @@ class InProcessTransport(Transport):
 
     def gather(self, global_ids, layers=None):
         return self.server.gather(global_ids, layers)
+
+    def gather_versioned(self, global_ids, have_versions, layers=None):
+        return self.server.gather_if_stale(global_ids, have_versions, layers)
 
     def transfer_time(self, global_ids, layers, bytes_per_scalar):
         if len(global_ids) == 0 or layers == 0:
@@ -319,6 +335,28 @@ class ShardedTransport(HashShardedWire, Transport):
             for o, p in zip(out, part):
                 o[pos] = p
         return out
+
+    def gather_versioned(self, global_ids, have_versions, layers=None):
+        sel = list(range(1, self.num_layers)) if layers is None \
+            else list(layers)
+        global_ids = np.asarray(global_ids)
+        have = np.asarray(have_versions, np.int64)
+        ver = np.zeros(len(global_ids), np.int64)
+        stale_parts, val_parts = [], []
+        for s, pos in self._split(global_ids):
+            v, st, vals = self.shards[s].gather_if_stale(
+                global_ids[pos], have[pos], sel)
+            ver[pos] = v
+            stale_parts.append(pos[st])
+            val_parts.append(vals)
+        if not stale_parts:
+            return (ver, np.zeros(0, np.int64),
+                    [np.zeros((0, self.hidden), np.float32) for _ in sel])
+        stale = np.concatenate(stale_parts).astype(np.int64)
+        order = np.argsort(stale, kind="stable")
+        vals = [np.concatenate([vp[j] for vp in val_parts], axis=0)[order]
+                for j in range(len(sel))]
+        return ver, stale[order], vals
 
     @property
     def num_embeddings_stored(self):

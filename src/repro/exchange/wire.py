@@ -39,6 +39,7 @@ OP_WRITE = 2
 OP_GATHER = 3
 OP_STATS = 4
 OP_SHUTDOWN = 5
+OP_VGATHER = 6       # conditional gather: versions always, rows if stale
 
 STATUS_OK = 0
 STATUS_ERR = 1
@@ -221,6 +222,21 @@ def build_gather(codec: str, global_ids: np.ndarray,
             + _U64.pack(len(global_ids)) + _gid_bytes(global_ids))
 
 
+def build_vgather(codec: str, global_ids: np.ndarray,
+                  have_versions: np.ndarray, layers: list[int]) -> bytes:
+    """Conditional gather: ``have_versions[i]`` is the client's cached
+    version for ``global_ids[i]`` (-1 = never seen).  The response is
+    ``n×int64`` current versions followed by codec blocks holding rows
+    only for positions whose version differs — both ends recompute the
+    stale set from the version vectors, so it is never sent."""
+    assert len(have_versions) == len(global_ids)
+    return (_U8.pack(OP_VGATHER) + _U8.pack(CODEC_IDS[codec])
+            + _U16.pack(len(layers))
+            + b"".join(_U16.pack(l) for l in layers)
+            + _U64.pack(len(global_ids)) + _gid_bytes(global_ids)
+            + np.ascontiguousarray(have_versions, np.int64).tobytes())
+
+
 def build_stats() -> bytes:
     return _U8.pack(OP_STATS)
 
@@ -261,6 +277,20 @@ def parse_request(body: bytes) -> tuple[int, dict]:
         gids = np.frombuffer(view, np.int64, n, offset=off)
         return op, {"codec": CODEC_NAMES[codec_id], "layers": layers,
                     "global_ids": gids}
+    if op == OP_VGATHER:
+        (codec_id,) = _U8.unpack_from(view, 1)
+        (nsel,) = _U16.unpack_from(view, 2)
+        off = 4
+        layers = [_U16.unpack_from(view, off + 2 * i)[0]
+                  for i in range(nsel)]
+        off += 2 * nsel
+        (n,) = _U64.unpack_from(view, off)
+        off += _U64.size
+        gids = np.frombuffer(view, np.int64, n, offset=off)
+        off += n * 8
+        have = np.frombuffer(view, np.int64, n, offset=off)
+        return op, {"codec": CODEC_NAMES[codec_id], "layers": layers,
+                    "global_ids": gids, "have_versions": have}
     if op in (OP_STATS, OP_SHUTDOWN):
         return op, {}
     raise ValueError(f"unknown opcode {op}")

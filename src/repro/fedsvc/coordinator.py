@@ -30,10 +30,16 @@ re-``hello`` with the same worker id / client ids on a fresh connection
 is a *re-join*: the worker catches up from the current model and its
 clients count again.
 
-Client sampling (Strategy.sample_frac): each sync round the coordinator
-draws ceil(frac·K) clients (deterministically from ``sample_seed`` and
-the round index); only the sampled subset pulls, barriers, and
-aggregates — FedBuff-style partial participation for the sync path.
+Client sampling (Strategy.sample_frac): the coordinator draws
+ceil(frac·K) clients deterministically from ``sample_seed`` and the
+round index (sync) / model version (async).  Sync: only the sampled
+subset pulls, barriers, and aggregates.  Async: get_model *parks* a
+worker none of whose clients are sampled at the current version until
+a version where one is (rate-limiting, not just filtering), and an
+update from a client that was not sampled at the version it trained
+from is refused (``accepted: False``) — it neither buffers nor charges
+the weight ledger.  A version whose entire sample died is redrawn from
+the survivors on disconnect, so sampling can never wedge the buffer.
 
 Weight-wire compression (Strategy.weight_codec): get_model responses
 are codec-encoded version diffs against a per-worker *served view* (the
@@ -162,14 +168,15 @@ class CoordinatorState:
         if self.stop.is_set() and not predicate():
             raise ConnectionError("coordinator stopping")
 
-    def _sampled(self, rnd: int) -> set[int]:
-        """The client set sync round ``rnd`` runs over (call with cond
+    def _sampled(self, idx: int) -> set[int]:
+        """The client set aggregation step ``idx`` runs over — the round
+        index in sync mode, the model version in async (call with cond
         held).  Drawn lazily from the clients active at draw time —
-        deterministic in (sample_seed, rnd) — and cached so barrier,
+        deterministic in (sample_seed, idx) — and cached so barrier,
         aggregation, and every worker's get_model agree."""
         if self.sample_frac is None:
             return self.active_clients
-        sel = self._samples.get(rnd)
+        sel = self._samples.get(idx)
         if sel is None:
             pool = sorted(self.active_clients)
             if not pool:
@@ -178,11 +185,11 @@ class CoordinatorState:
             # (0.2 * 5 == 1.0000000000000002) from bumping a whole client
             k = max(1, math.ceil(self.sample_frac * self.num_clients
                                  - 1e-9))
-            rng = np.random.default_rng((self.sample_seed, rnd))
+            rng = np.random.default_rng((self.sample_seed, idx))
             sel = set(int(c) for c in
                       rng.choice(pool, size=min(k, len(pool)),
                                  replace=False))
-            self._samples[rnd] = sel
+            self._samples[idx] = sel
         return sel
 
     # -- weight-plane wire ledger ------------------------------------------
@@ -343,6 +350,16 @@ class CoordinatorState:
                     self.pulled.clear()
                     self.updates.clear()
                 self._maybe_aggregate_sync()
+            else:
+                # async: a version whose entire sample died would park
+                # every survivor in get_model forever — redraw it from
+                # the clients still standing
+                if (not self.done and self.sample_frac is not None
+                        and self.active_clients
+                        and not (self._sampled(self.version)
+                                 & self.active_clients)):
+                    self._samples.pop(self.version, None)
+                    self._sampled(self.version)
             self.cond.notify_all()
 
     # -- request dispatch --------------------------------------------------
@@ -425,8 +442,20 @@ class CoordinatorState:
                 self._wait(lambda: self.assembled
                            and (self.round >= want or self.done))
             else:
-                self._wait(lambda: self.assembled
-                           and self.leaves is not None)
+                # async + sampling: an unsampled worker parks here until
+                # a version samples one of its clients — that is what
+                # rate-limits it (merely filtering in the worker would
+                # let it spin on get_model at full speed)
+                def _async_ready() -> bool:
+                    if not (self.assembled and self.leaves is not None):
+                        return False
+                    if self.done or self.sample_frac is None:
+                        return True
+                    cids = self.workers.get(
+                        self._conn_worker.get(conn_id), set())
+                    return not cids or \
+                        bool(cids & self._sampled(self.version))
+                self._wait(_async_ready)
             if self.leaves is None:
                 return protocol.build_err("no model: no worker sent init "
                                           "leaves yet")
@@ -442,9 +471,9 @@ class CoordinatorState:
             head = {"round": self.round, "version": self.version,
                     "serial": self.serial, "done": self.done,
                     "accs": list(self.acc_history)}
-            if self.mode == "sync" and self.sample_frac is not None \
-                    and not self.done:
-                head["sampled"] = sorted(self._sampled(self.round))
+            if self.sample_frac is not None and not self.done:
+                head["sampled"] = sorted(self._sampled(
+                    self.round if self.mode == "sync" else self.version))
             worker = self._conn_worker.get(conn_id)
             served = self._served.get(worker) if worker else None
             if self.weight_codec is not None and worker is not None:
@@ -531,16 +560,27 @@ class CoordinatorState:
                 self.updates[rec["client_id"]] = rec
                 self._maybe_aggregate_sync()
             else:
+                version = int(header["version"])
+                if self.sample_frac is not None and \
+                        rec["client_id"] not in self._sampled(version):
+                    # not sampled at the version it trained from: the
+                    # update neither buffers nor charges the wire ledger
+                    # (it should not have been computed — the get_model
+                    # park exists so this only happens on races)
+                    return protocol.build_ok(
+                        {"round": self.round, "version": self.version,
+                         "done": self.done, "accepted": False})
                 # async updates are deltas by construction; a codec just
                 # changes the wire form, so the decode is all it takes
                 rec["leaves"] = delta if codec is not None else tensors
-                rec["version"] = int(header["version"])
+                rec["version"] = version
                 self._charge_wire("up", wire.tensors_nbytes(tensors))
                 self.buffer.append(rec)
                 self._maybe_aggregate_async()
             return protocol.build_ok({"round": self.round,
                                       "version": self.version,
-                                      "done": self.done})
+                                      "done": self.done,
+                                      "accepted": True})
 
     def _op_stats(self) -> bytes:
         with self.cond:

@@ -29,10 +29,13 @@ residual carry, and consumes get_model responses that may be version
 diffs against the model view it already holds — the coordinator tracks
 that view bit-identically, so diff chains never drift.
 
-Client sampling: a sync get_model response may carry the round's
-``sampled`` client set; a worker none of whose clients are sampled
-skips the round entirely (no pull, no barrier, no update) and parks on
-the next round's get_model.
+Client sampling: a get_model response may carry the ``sampled`` client
+set of the current round (sync) / model version (async); the worker
+trains only those of its clients.  Sync: a worker with no sampled
+client skips the round entirely (no pull, no barrier, no update) and
+parks on the next round's get_model.  Async: the coordinator parks an
+unsampled worker *inside* get_model until a version samples it, so
+unsampled workers are rate-limited rather than left spinning.
 
 Scenario injection (:class:`WorkerScenario`): a pacing multiplier and a
 fixed straggler delay stretch this worker's round both in *measured*
@@ -294,12 +297,21 @@ class FedWorker:
             if head["done"]:
                 return
             version = int(head["version"])
+            sampled = head.get("sampled")
+            mine = self.client_ids if sampled is None else \
+                [c for c in self.client_ids if c in sampled]
+            if not mine:
+                # the coordinator parks unsampled workers in get_model,
+                # so this only happens when the version moved between
+                # its wakeup and our read: refetch for the new version
+                it += 1
+                continue
             base = leaves
             params = tr.leaves_to_params(leaves)
             tr.set_round_tau(it, head.get("accs", ()))
             self._maybe_drop(it)
             head = {}
-            for ci in self.client_ids:
+            for ci in mine:
                 # delay baseline is per client: each client's update is
                 # its own async round, and pacing must not compound over
                 # earlier clients' train time + injected sleeps

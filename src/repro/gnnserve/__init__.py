@@ -1,0 +1,33 @@
+"""gnnserve: the inference-serving plane for a trained federated GNN.
+
+Answers vertex-classification queries against the model + embedding
+state a :class:`~repro.core.federated.FederatedGNNTrainer` publishes
+via ``export_for_serving()``:
+
+  cache     — HotEmbeddingCache: version-validated LRU over the
+              embedding-server rows (τ-delta pushes bump row versions,
+              so freshness costs 8 B/row on the wire, not a re-pull)
+  engine    — ShardServeEngine: deterministic neighbourhood expansion +
+              depth-escalating early-exit forward for one shard;
+              build_serving() assembles the multi-shard ServingPlane
+  batcher   — QueryBatcher: continuous batching of queries into
+              fixed-size forward batches, one depth pass per step
+  wire      — PREDICT/STATS opcodes over repro.exchange.wire framing
+  frontend  — threaded TCP scoring frontend + GnnServeClient
+
+CLI: ``python -m repro.launch.gnn_serve``; bench:
+``python -m benchmarks.bench_gnnserve``.
+"""
+
+from .cache import HotEmbeddingCache
+from .batcher import QueryBatcher, ServedResult
+from .engine import ShardServeEngine, ServingPlane, build_serving
+
+__all__ = [
+    "HotEmbeddingCache",
+    "QueryBatcher",
+    "ServedResult",
+    "ShardServeEngine",
+    "ServingPlane",
+    "build_serving",
+]

@@ -64,6 +64,8 @@ class _ServerState:
                 return self._handle_write(req)
             if op == wire.OP_GATHER:
                 return self._handle_gather(req)
+            if op == wire.OP_VGATHER:
+                return self._handle_vgather(req)
             if op == wire.OP_STATS:
                 with self.lock:
                     payload = wire.build_stats_payload(
@@ -107,6 +109,15 @@ class _ServerState:
             rows = self.store.gather(gids, req["layers"])
         blocks = [wire.encode_block(codec, cdc.encode(r)) for r in rows]
         return wire.build_ok(b"".join(blocks))
+
+    def _handle_vgather(self, req: dict) -> bytes:
+        codec, gids = req["codec"], req["global_ids"]
+        cdc = get_codec(codec)
+        with self.lock:
+            ver, _stale, vals = self.store.gather_if_stale(
+                gids, req["have_versions"], req["layers"])
+        blocks = [wire.encode_block(codec, cdc.encode(r)) for r in vals]
+        return wire.build_ok(ver.tobytes() + b"".join(blocks))
 
 
 class EmbedServerHandle:

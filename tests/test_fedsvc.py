@@ -620,6 +620,91 @@ def test_sync_client_sampling_subset_and_eligible_only():
         b.close()
 
 
+def test_async_client_sampling_rate_limits_and_refuses():
+    """sample_frac=0.5, K=2, async: sample_seed=1 draws {0} at version 0
+    and {1} at version 1.  The unsampled worker's get_model parks until
+    its client is drawn (rate-limiting), and an update from a client not
+    sampled at its base version is refused — no buffering, no version
+    bump, no weight-wire charge."""
+    state = _state(num_rounds=2, mode="async", buffer_size=1,
+                   sample_frac=0.5, sample_seed=1)
+    with serve_in_thread(state) as coord:
+        a = protocol.CoordinatorClient(coord.address)
+        b = protocol.CoordinatorClient(coord.address)
+        a.hello("w0", [0], init_leaves=[np.zeros(3, np.float32)])
+        b.hello("w1", [1])
+        h, _ = a.get_model(0)
+        assert h["version"] == 0 and h["sampled"] == [0]
+        # client 1 was not sampled at version 0: its update is refused
+        bytes_before = state.weight_bytes_cum
+        h = b.update({"version": 0, "client_id": 1, "weight": 1.0},
+                     [np.ones(3, np.float32)])
+        assert h["accepted"] is False
+        assert state.version == 0 and state.buffer == []
+        assert state.weight_bytes_cum == bytes_before
+        # w1's get_model parks while its client is unsampled
+        got = {}
+        unblocked = threading.Event()
+
+        def fetch():
+            got["head"], got["leaves"] = b.get_model(0)
+            unblocked.set()
+
+        t = threading.Thread(target=fetch, daemon=True)
+        t.start()
+        time.sleep(0.3)
+        assert not unblocked.is_set()          # still parked at version 0
+        # the sampled client's update advances the version ...
+        h = a.update({"version": 0, "client_id": 0, "weight": 1.0},
+                     [np.ones(3, np.float32)])
+        assert h["accepted"] is True and state.version == 1
+        # ... which samples client 1 and releases the parked worker
+        assert unblocked.wait(5.0)
+        t.join()
+        assert got["head"]["version"] == 1
+        assert got["head"]["sampled"] == [1]
+        h = b.update({"version": 1, "client_id": 1, "weight": 1.0},
+                     [np.ones(3, np.float32)])
+        assert h["accepted"] is True and h["done"]
+        assert state.version == 2
+        assert [rec["clients"] for rec in state.history] == [[0], [1]]
+        a.close()
+        b.close()
+
+
+def test_async_dead_sample_redrawn_on_disconnect():
+    """If every client sampled at the current version deregisters, the
+    sample is redrawn from the survivors — parked workers wake up
+    instead of waiting on the dead forever."""
+    state = _state(num_rounds=1, mode="async", buffer_size=1,
+                   sample_frac=0.5, sample_seed=1)   # version 0 → {0}
+    with serve_in_thread(state) as coord:
+        a = protocol.CoordinatorClient(coord.address)
+        b = protocol.CoordinatorClient(coord.address)
+        a.hello("w0", [0], init_leaves=[np.zeros(3, np.float32)])
+        b.hello("w1", [1])
+        got = {}
+        unblocked = threading.Event()
+
+        def fetch():
+            got["head"], got["leaves"] = b.get_model(0)
+            unblocked.set()
+
+        t = threading.Thread(target=fetch, daemon=True)
+        t.start()
+        time.sleep(0.3)
+        assert not unblocked.is_set()          # parked: {0} is sampled
+        a.close()                              # the whole sample dies
+        assert unblocked.wait(5.0)
+        t.join()
+        assert got["head"]["sampled"] == [1]   # redrawn from survivors
+        h = b.update({"version": 0, "client_id": 1, "weight": 1.0},
+                     [np.ones(3, np.float32)])
+        assert h["accepted"] is True and h["done"]
+        assert state.history[-1]["clients"] == [1]
+        b.close()
+
+
 # -- weight-wire compression + churn (worker-level, strategy D) ---------------
 
 D_KW = dict(graph="reddit", scale=0.05, graph_seed=3, num_clients=2,

@@ -1,0 +1,194 @@
+"""Serving plane: cache coherence, early exit, batcher accounting.
+
+The deterministic serving invariants gated here:
+
+  * fresh-cache serving is bit-identical to an offline forward pass
+  * rows invalidated by a τ-delta push are re-pulled, and serving
+    answers from the refreshed rows
+  * threshold 1.0 disables early exit — every request runs full depth
+    and reproduces the exact argmax
+  * the batcher drains bursty, mixed-threshold traffic without
+    dropping or duplicating a single request id
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import FederatedGNNTrainer, Strategy
+from repro.gnnserve import build_serving
+from repro.gnnserve.frontend import GnnServeClient, serve_in_thread
+from repro.graphs import make_graph
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    g = make_graph("arxiv", scale=0.1, seed=7)
+    tr = FederatedGNNTrainer(g, 2, Strategy("E"), num_layers=2, hidden=8,
+                             fanout=4, batch_size=16, epochs_per_round=1,
+                             seed=0)
+    tr.pretrain_round()
+    tr.run_round(0, 0.0)
+    return tr
+
+
+@pytest.fixture(scope="module")
+def bundle(trained):
+    return trained.export_for_serving()
+
+
+def _plane(bundle, **kw):
+    kw.setdefault("cache_rows", 4096)
+    kw.setdefault("serve_fanout", 4)
+    kw.setdefault("batch_size", 16)
+    return build_serving(bundle, **kw)
+
+
+def _offline_ref(plane, vids):
+    """vid -> offline full-depth argmax, computed per owner shard in
+    engine-batch-sized chunks (the reference path shares no batcher or
+    early-exit state with serving)."""
+    by_owner = collections.defaultdict(list)
+    for v in sorted(set(int(v) for v in vids)):
+        by_owner[int(plane.part[v])].append(v)
+    ref = {}
+    for ci, vs in by_owner.items():
+        eng = plane.engines[ci]
+        for i in range(0, len(vs), eng.batch_size):
+            chunk = vs[i: i + eng.batch_size]
+            lids = np.array([eng.local_id(v) for v in chunk], np.int64)
+            preds = eng.offline_predict(lids)
+            for v, p in zip(chunk, preds):
+                ref[v] = int(p)
+    return ref
+
+
+def test_fresh_cache_serving_is_bit_identical(bundle):
+    plane = _plane(bundle)
+    rng = np.random.default_rng(0)
+    V = len(plane.part)
+    # duplicates on purpose: coalesced queries for the same vertex must
+    # not perturb each other's answers
+    vids = rng.integers(0, V, size=48)
+    vids[::7] = vids[0]
+    rid_to_vid = {plane.submit(int(v), 1.0): int(v) for v in vids[:40]}
+    for v in vids[40:]:
+        rid_to_vid[plane.submit(int(v), 1.0)] = int(v)
+    results = {r.rid: r for r in plane.drain()}
+    assert sorted(results) == sorted(rid_to_vid)
+    ref = _offline_ref(plane, vids)
+    for rid, v in rid_to_vid.items():
+        assert results[rid].pred == ref[v], f"vid {v} diverged from offline"
+        assert results[rid].depth == plane.engines[0].L
+    st = plane.cache.stats()
+    assert st["stale_refreshes"] == 0     # nothing pushed since export
+    assert st["misses"] > 0 and st["rows"] > 0
+
+
+def test_stale_rows_repulled_after_push(trained, bundle):
+    plane = _plane(bundle)
+    rng = np.random.default_rng(1)
+    V = len(plane.part)
+    vids = rng.integers(0, V, size=48)
+    first = {r.rid: r for r in _serve_all(plane, vids)}
+    assert len(first) == len(vids)
+    assert plane.cache.stats()["stale_refreshes"] == 0
+
+    # a real training round lands τ-delta pushes on the reciprocal
+    # boundary rows — exactly the rows the serving cache revalidates
+    trained.run_round(1, 0.0)
+
+    plane.cache.reset_stats()
+    second = {r.rid: r for r in _serve_all(plane, vids)}
+    st = plane.cache.stats()
+    assert st["stale_refreshes"] > 0, \
+        "push bumped row versions but the cache never refreshed"
+    # the refreshed serve answers from current store rows: bit-identical
+    # to an offline pass that peeks the store directly
+    ref = _offline_ref(plane, vids)
+    for r in second.values():
+        assert r.pred == ref[r.vid]
+
+
+def _serve_all(plane, vids, thresholds=None):
+    if thresholds is None:
+        thresholds = [1.0] * len(vids)
+    for v, t in zip(vids, thresholds):
+        plane.submit(int(v), float(t))
+    return plane.drain()
+
+
+def test_threshold_one_never_exits_early(bundle):
+    plane = _plane(bundle)
+    rng = np.random.default_rng(2)
+    V = len(plane.part)
+    vids = rng.integers(0, V, size=32)
+    # mix aggressive early-exiters into the same batches: they must not
+    # drag the threshold-1.0 requests out of the full-depth path
+    thrs = [0.0 if i % 2 else 1.0 for i in range(len(vids))]
+    results = _serve_all(plane, vids, thrs)
+    L = plane.engines[0].L
+    ref = _offline_ref(plane, vids)
+    for r, t in zip(sorted(results, key=lambda r: r.rid), thrs):
+        if t == 1.0:
+            assert r.depth == L
+            assert r.pred == ref[r.vid]
+        else:
+            # softmax max is always strictly positive: threshold 0.0
+            # retires at the first scheduled depth
+            assert r.depth == plane.engines[0].depth_schedule[0]
+
+    # same invariant on the raw engine path (no batcher): threshold 1.0
+    # reproduces the full-depth argmax exactly
+    eng = plane.engines[0]
+    seeds = np.arange(min(12, eng.shard.num_local), dtype=np.int64)
+    preds, confs, depths = eng.predict(seeds, np.ones(len(seeds)))
+    full = np.argmax(eng.forward_depth(seeds, L)[: len(seeds)], axis=-1)
+    np.testing.assert_array_equal(preds, full.astype(np.int32))
+    assert np.all(depths == L)
+    assert np.all(confs <= 1.0)
+
+
+def test_batcher_drains_bursts_without_loss(bundle):
+    plane = _plane(bundle, depth_schedule=None)
+    rng = np.random.default_rng(3)
+    V = len(plane.part)
+    submitted = set()
+    done = []
+    # three bursts with steps interleaved, so escalated survivors from
+    # earlier bursts re-batch with fresh arrivals
+    for burst in range(3):
+        vids = rng.integers(0, V, size=25)
+        thrs = rng.choice([0.0, 0.5, 1.0], size=25)
+        for v, t in zip(vids, thrs):
+            submitted.add(plane.submit(int(v), float(t)))
+        for _ in range(burst + 1):
+            done.extend(plane.step())
+    done.extend(plane.drain())
+    assert plane.pending() == 0
+    rids = [r.rid for r in done]
+    assert len(rids) == len(set(rids)), "duplicated request ids"
+    assert set(rids) == submitted, "dropped request ids"
+    st = plane.stats()
+    assert st["served"] == len(submitted)
+    assert sum(st["exits_by_depth"].values()) == len(submitted)
+
+
+def test_frontend_roundtrip_matches_offline(bundle):
+    plane = _plane(bundle)
+    rng = np.random.default_rng(4)
+    V = len(plane.part)
+    vids = rng.integers(0, V, size=20)
+    with serve_in_thread(plane) as handle:
+        with GnnServeClient(handle.address) as cli:
+            preds, confs, depths = cli.predict(vids)
+            stats = cli.stats()
+    ref = _offline_ref(plane, vids)
+    np.testing.assert_array_equal(
+        preds, np.array([ref[int(v)] for v in vids], np.int32))
+    assert np.all(depths == plane.engines[0].L)
+    assert np.all((confs > 0.0) & (confs <= 1.0))
+    assert stats["served"] == len(vids)

@@ -11,6 +11,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import FederatedGNNTrainer, default_strategies
+from repro.core.federated import eval_arrays_for, sampled_eval_vertices
 from repro.graphs import (bfs_partition, edge_cut, hash_partition,
                           make_client_shards, make_graph)
 from repro.graphs.graph import from_edges
@@ -198,9 +199,10 @@ def test_store_runconfig_shard_local_worker(tmp_path):
     assert _round_fingerprint(s_store) == _round_fingerprint(s_mem)
 
 
-def test_store_eval_prefix_cap(tmp_path):
-    """Past eval_max_edges the evaluation graph falls back to the
-    largest vertex-prefix subgraph that fits."""
+def test_store_eval_sampled_cap(tmp_path):
+    """Past eval_max_edges the evaluation graph is the subgraph induced
+    by a *seeded uniform vertex sample* whose edge mass fits the budget
+    — deterministic in the seed and no longer a vertex prefix."""
     g = make_graph("arxiv", scale=0.1, seed=3)
     store = store_from_graph(g, str(tmp_path / "g"))
     strat = default_strategies()["D"]
@@ -209,6 +211,128 @@ def test_store_eval_prefix_cap(tmp_path):
     n_eval = int(tr.eval_arrays["num_local"])
     assert 0 < n_eval < g.num_vertices
     assert 0.0 <= tr.evaluate() <= 1.0
+    # a uniform draw of a strict subset is (overwhelmingly) not the
+    # prefix, and the same seed redraws the same subset
+    assert not np.array_equal(tr.eval_gids, np.arange(n_eval))
+    np.testing.assert_array_equal(
+        tr.eval_gids, sampled_eval_vertices(g, g.num_edges // 4, seed=0))
+
+
+def test_sampled_eval_full_budget_is_exact():
+    """With a budget covering every edge the sampled estimator selects
+    all vertices, and its induced arrays are bit-identical to the exact
+    full-graph eval arrays the trainer builds below the cap."""
+    g = make_graph("arxiv", scale=0.1, seed=3)
+    sel = sampled_eval_vertices(g, g.num_edges, seed=5)
+    np.testing.assert_array_equal(sel, np.arange(g.num_vertices))
+    tr = FederatedGNNTrainer(g, 2, default_strategies()["D"],
+                             batch_size=32, seed=0)   # default cap: exact
+    ours = eval_arrays_for(g, sel)
+    for k in ("edge_src", "edge_dst", "src_is_remote", "features"):
+        np.testing.assert_array_equal(np.asarray(ours[k]),
+                                      np.asarray(tr.eval_arrays[k]))
+    assert ours["num_local"] == tr.eval_arrays["num_local"]
+
+
+def test_sampled_eval_removes_prefix_bias(tmp_path):
+    """Skewed store: labels follow build order (first half class 0), no
+    train mask, and a crafted constant-class-0 model.  True full-graph
+    accuracy is 0.5; the old vertex-prefix fallback reports 1.0; the
+    seeded uniform sample must land near the truth."""
+    v = 2000
+    src = np.arange(v - 1)
+    labels = (np.arange(v) >= v // 2).astype(np.int32)
+    g = from_edges(v, src, src + 1,
+                   features=np.ones((v, 4), np.float32), labels=labels,
+                   train_mask=np.zeros(v, bool), num_classes=2)
+    store = store_from_graph(g, str(tmp_path / "skew"))
+    tr = FederatedGNNTrainer(store, 2, default_strategies()["D"],
+                             batch_size=32, seed=0, num_layers=2,
+                             hidden=8, eval_max_edges=g.num_edges // 4)
+    # constant predictor: zero weights, bias argmax at class 0
+    params = [dict(layer) for layer in tr.params]
+    params[-1]["w_neigh"] = params[-1]["w_neigh"] * 0.0
+    params[-1]["b"] = params[-1]["b"].at[0].set(1.0)
+    acc = tr.evaluate(params)
+    n_eval = len(tr.eval_gids)
+    assert 0 < n_eval < v
+    # what the removed prefix fallback would have estimated
+    prefix_acc = float((labels[:n_eval] == 0).mean())
+    assert prefix_acc == 1.0
+    assert abs(acc - 0.5) < 0.15, acc
+
+
+@pytest.mark.slow
+def test_store_backed_multiprocess_control_plane(tmp_path):
+    """Carried over from ISSUE-5: coordinator + 2 workers + 2 embed
+    shards as real OS processes, every participant opening one prebuilt
+    mmap store (``--graph store:<dir>`` with baked partition + shards),
+    FedAvg history equal to the in-process trainer off the same store."""
+    import socket
+    import time as _time
+
+    from repro.fedsvc.runtime import RunConfig
+
+    out = str(tmp_path / "store")
+    built = subprocess.run(
+        [sys.executable, "-m", "repro.launch.build_store", "--out", out,
+         "--preset", "reddit", "--scale", "0.05", "--graph-seed", "3",
+         "--seed", "0", "--clients", "2"],
+        capture_output=True, text=True, timeout=300)
+    assert built.returncode == 0, built.stderr
+    spec = f"store:{out}"
+
+    # in-process reference off the very same store files
+    cfg = RunConfig(graph=spec, num_clients=2, strategy="E", rounds=2,
+                    seed=0)
+    ref = cfg.build_trainer().train(2)
+
+    def free_port() -> int:
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+        s.close()
+        return port
+
+    e1, e2, cp = free_port(), free_port(), free_port()
+    common = ["--graph", spec, "--clients", "2", "--strategy", "E",
+              "--rounds", "2", "--seed", "0",
+              "--embed", f"127.0.0.1:{e1}", "--embed", f"127.0.0.1:{e2}"]
+    out_json = tmp_path / "history.json"
+    procs = []
+    try:
+        for port in (e1, e2):
+            procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.embed_server",
+                 "--port", str(port), "--num-layers", "3",
+                 "--hidden", "32"]))
+        coord = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.fed_coordinator",
+             "--port", str(cp), "--timeout", "540",
+             "--out", str(out_json)] + common,
+            stdout=subprocess.PIPE, text=True)
+        procs.append(coord)
+        _time.sleep(1.0)
+        for i in range(2):
+            procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.fed_worker",
+                 "--coordinator", f"127.0.0.1:{cp}",
+                 "--client-ids", str(i)] + common,
+                stdout=subprocess.DEVNULL))
+        stdout, _ = coord.communicate(timeout=600)
+        assert "fed_coordinator DONE" in stdout, stdout
+        history = json.loads(out_json.read_text())
+        assert [h["accuracy"] for h in history] == \
+            [s.accuracy for s in ref]
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.terminate()
+        for p in procs:
+            try:
+                p.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                p.kill()
 
 
 # -- pull-frequency shard rebalancing -----------------------------------------
