@@ -1,0 +1,264 @@
+"""Fused exchange-kernel sweep: rooflines + measured fused-vs-unfused.
+
+For each fused device kernel of the exchange plane —
+
+  gather_quantize   — pull response: row gather fused with int8 encode
+  dequant_scatter   — push apply: int8 decode fused with table scatter
+  dequant_aggregate — pulled int8 rows fed straight to ELL mean-agg
+
+— this sweep reports:
+
+  1. **Analytic roofline terms** on the TPU constants of
+     ``repro.launch.mesh`` (the same term model as
+     ``benchmarks/roofline.py``): compute term = FLOPs / peak,
+     memory term = HBM bytes / HBM bandwidth, plus the HBM bytes the
+     *unfused* pipeline would move (the fp32 intermediate written and
+     re-read between the two passes).  All three kernels are firmly
+     memory-bound, so the fused/unfused HBM ratio is the expected TPU
+     speedup.
+  2. **Measured wall-clock** on this CPU container with interpret off —
+     the numpy-vs-device *dispatch* comparison: the fused path runs the
+     jitted device program on device-resident tables (what
+     ``device_tables=True`` servers execute), the unfused baseline runs
+     the numpy host pipeline plus the host↔device staging the old plane
+     paid (fp32 crosses the boundary instead of int8).
+  3. **Exchange-plane bytes/s**: the wire-form bytes each kernel
+     produces/consumes per second, against the NetworkModel bandwidth
+     *fitted* from live loopback RPCs (``fit_network_model`` over
+     TcpTransport samples) — showing the codec kernels clear the wire
+     with margin, i.e. compression stays off the critical path.
+
+Persists ``BENCH_kernels.json`` at the repo root and prints the usual
+``name,us_per_call,derived`` CSV rows.  ``--full`` widens the sweep.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import NetworkModel, fit_network_model
+from repro.kernels import ops, ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _median_s(fn, *, reps: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _terms(flops: float, hbm_bytes: float) -> dict:
+    ct = flops / PEAK_FLOPS_BF16
+    mt = hbm_bytes / HBM_BW
+    return {"compute_s": ct, "memory_s": mt,
+            "dominant": "memory" if mt >= ct else "compute"}
+
+
+# -- per-kernel cases ---------------------------------------------------------
+
+def case_gather_quantize(R: int, n: int, h: int, rng) -> dict:
+    table = rng.normal(size=(R, h)).astype(np.float32)
+    rows = rng.choice(R, size=n, replace=False)
+    tbl_dev = jnp.asarray(table)
+    jax.block_until_ready(tbl_dev)
+
+    def fused():
+        v, s = ops.gather_quantize(tbl_dev, rows)
+        jax.block_until_ready((v, s))
+
+    def unfused():
+        # the numpy plane: host gather, host encode, fp32-era staging of
+        # the wire arrays onto the device for the downstream consumer
+        v, s = ops._np_gather_quantize(table, rows)
+        jax.block_until_ready((jnp.asarray(v), jnp.asarray(s)))
+
+    wire_bytes = n * h + 4 * n                       # int8 rows + scales
+    fused_hbm = n * h * 4 + 4 * n + wire_bytes       # read rows, write wire
+    unfused_hbm = fused_hbm + 2 * n * h * 4          # + fp32 block w+r
+    return {
+        "name": "gather_quantize", "shape": {"R": R, "n": n, "hidden": h},
+        "roofline": {**_terms(4.0 * n * h, fused_hbm),
+                     "hbm_bytes_fused": fused_hbm,
+                     "hbm_bytes_unfused": unfused_hbm,
+                     "hbm_savings_x": unfused_hbm / fused_hbm},
+        "fused_s": _median_s(fused), "unfused_s": _median_s(unfused),
+        "wire_bytes": wire_bytes,
+    }
+
+
+def case_dequant_scatter(R: int, n: int, h: int, rng) -> dict:
+    table = rng.normal(size=(R, h)).astype(np.float32)
+    rows = rng.choice(R, size=n, replace=False)
+    values, scales = ops._np_quantize_int8(
+        rng.normal(size=(n, h)).astype(np.float32))
+    tbl_dev = jnp.asarray(table)
+    jax.block_until_ready(tbl_dev)
+
+    def fused():
+        # wire form (host) → one fused decode+scatter into the resident
+        # table; int8 crosses the boundary
+        jax.block_until_ready(ops.dequant_scatter(tbl_dev, rows,
+                                                  values, scales))
+
+    rows_dev = jnp.asarray(rows)
+
+    @jax.jit
+    def _scatter(t, idx, new):
+        return t.at[idx].set(new)
+
+    def unfused():
+        # host decode first: the fp32 rows cross the boundary (4×), then
+        # a separate device scatter
+        new = ops._np_dequantize_int8(values, scales)
+        jax.block_until_ready(_scatter(tbl_dev, rows_dev, jnp.asarray(new)))
+
+    wire_bytes = n * h + 4 * n
+    fused_hbm = wire_bytes + n * h * 4               # read wire, write rows
+    unfused_hbm = fused_hbm + 2 * n * h * 4          # + fp32 block w+r
+    return {
+        "name": "dequant_scatter", "shape": {"R": R, "n": n, "hidden": h},
+        "roofline": {**_terms(1.0 * n * h, fused_hbm),
+                     "hbm_bytes_fused": fused_hbm,
+                     "hbm_bytes_unfused": unfused_hbm,
+                     "hbm_savings_x": unfused_hbm / fused_hbm},
+        "fused_s": _median_s(fused), "unfused_s": _median_s(unfused),
+        "wire_bytes": wire_bytes,
+    }
+
+
+def case_dequant_aggregate(n_src: int, n_dst: int, k: int, h: int,
+                           rng) -> dict:
+    values, scales = ops._np_quantize_int8(
+        rng.normal(size=(n_src, h)).astype(np.float32))
+    ell_idx = rng.integers(0, n_src, size=(n_dst, k)).astype(np.int32)
+    ell_mask = rng.random((n_dst, k)) < 0.85
+    idx_dev, mask_dev = jnp.asarray(ell_idx), jnp.asarray(ell_mask)
+    fused_fn = jax.jit(ref.dequant_aggregate)
+    agg_fn = jax.jit(ref.gnn_aggregate)
+    jax.block_until_ready((idx_dev, mask_dev))
+
+    def fused():
+        # pulled wire form crosses at 1 B/scalar; dequant fuses into the
+        # aggregation gather — the fp32 source table never materializes
+        jax.block_until_ready(fused_fn(jnp.asarray(values),
+                                       jnp.asarray(scales),
+                                       idx_dev, mask_dev))
+
+    def unfused():
+        # host dequant materializes the fp32 table, which then crosses
+        # the boundary at 4 B/scalar before a separate aggregation
+        feats = ops._np_dequantize_int8(values, scales)
+        jax.block_until_ready(agg_fn(jnp.asarray(feats), idx_dev, mask_dev))
+
+    wire_bytes = n_src * h + 4 * n_src
+    fused_hbm = wire_bytes + n_dst * h * 4
+    unfused_hbm = fused_hbm + 2 * n_src * h * 4      # fp32 table w+r
+    return {
+        "name": "dequant_aggregate",
+        "shape": {"n_src": n_src, "n_dst": n_dst, "K": k, "hidden": h},
+        "roofline": {**_terms(2.0 * n_dst * k * h, fused_hbm),
+                     "hbm_bytes_fused": fused_hbm,
+                     "hbm_bytes_unfused": unfused_hbm,
+                     "hbm_savings_x": unfused_hbm / fused_hbm},
+        "fused_s": _median_s(fused), "unfused_s": _median_s(unfused),
+        "wire_bytes": wire_bytes,
+    }
+
+
+# -- fitted wire bandwidth ----------------------------------------------------
+
+def fitted_bandwidth(hidden_sweep, n_sweep) -> float:
+    """Fit the NetworkModel to live loopback RPCs (int8 codec) and
+    return the fitted bandwidth — the yardstick the kernel bytes/s are
+    judged against."""
+    from repro.exchange.socket_transport import TcpTransport
+    from repro.launch.embed_server import serve_in_thread
+
+    samples = []
+    rng = np.random.default_rng(0)
+    for hidden in hidden_sweep:
+        with serve_in_thread(3, hidden) as handle:
+            tr = TcpTransport(3, hidden, [handle.address], codec="int8")
+            try:
+                for n in n_sweep:
+                    gids = np.arange(n)
+                    vals = [rng.normal(size=(n, hidden)).astype(np.float32)
+                            for _ in range(2)]
+                    tr.register(gids)
+                    tr.write(gids, vals)
+                    tr.gather(gids)
+                samples += [(s.payload_bytes, 1, s.n_rows * s.layers,
+                             s.measured_s)
+                            for s in tr.rpc_samples
+                            if s.fanout == 1 and s.op in ("write", "gather")]
+            finally:
+                tr.close()
+    return float(fit_network_model(samples, relative=True)
+                 .bandwidth_bytes_per_s)
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    rng = np.random.default_rng(0)
+    h = 128
+    if full:
+        cases = [
+            case_gather_quantize(16384, 8192, h, rng),
+            case_dequant_scatter(16384, 8192, h, rng),
+            case_dequant_aggregate(8192, 4096, 5, h, rng),
+        ]
+        bw_fit = fitted_bandwidth((32, 64, 128), (256, 1024, 4096))
+    else:
+        cases = [
+            case_gather_quantize(4096, 2048, h, rng),
+            case_dequant_scatter(4096, 2048, h, rng),
+            case_dequant_aggregate(2048, 1024, 5, h, rng),
+        ]
+        bw_fit = fitted_bandwidth((32, 128), (256, 1024))
+
+    default_bw = NetworkModel().bandwidth_bytes_per_s
+    for c in cases:
+        c["speedup_x"] = c["unfused_s"] / c["fused_s"]
+        c["wire_bytes_per_s"] = c["wire_bytes"] / c["fused_s"]
+        c["x_over_fitted_bw"] = c["wire_bytes_per_s"] / bw_fit
+        r = c["roofline"]
+        print(f"{c['name']},{c['fused_s'] * 1e6:.0f},"
+              f"unfused_us={c['unfused_s'] * 1e6:.0f} "
+              f"speedup={c['speedup_x']:.2f}x "
+              f"tpu_memory_us={r['memory_s'] * 1e6:.2f} "
+              f"tpu_compute_us={r['compute_s'] * 1e6:.2f} "
+              f"dominant={r['dominant']} "
+              f"hbm_savings={r['hbm_savings_x']:.2f}x "
+              f"wire_MBps={c['wire_bytes_per_s'] / 1e6:.0f} "
+              f"x_fitted_bw={c['x_over_fitted_bw']:.1f}", flush=True)
+    print(f"wire_fit,0,fitted_bandwidth_MBps={bw_fit / 1e6:.1f} "
+          f"default_MBps={default_bw / 1e6:.1f}", flush=True)
+
+    out = {
+        "mode": "full" if full else "quick",
+        "backend": jax.default_backend(),
+        "fitted_bandwidth_Bps": bw_fit,
+        "default_bandwidth_Bps": default_bw,
+        "kernels": cases,
+    }
+    path = REPO_ROOT / "BENCH_kernels.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"bench_kernels,0,wrote={path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,16 @@ it selected).  ``versions``/``gather_if_stale`` let a serving-side cache
 validate held rows for the cost of 8 B/row instead of re-pulling whole
 embeddings — a cached row is valid precisely while the server hasn't
 accepted a delta for it.
+
+Device-table mode (``device_tables=True``): the layer tables live as
+jax Arrays, stored lane-aligned — (capacity, pad_hidden(hidden)) with
+power-of-two capacity ≥ 256 — so the fused exchange kernels
+(:mod:`repro.kernels.exchange_fused`) see pre-padded tables and never
+copy them.  :meth:`gather_quantized` / :meth:`write_quantized` are the
+fused pull-response / push-apply surface: gather+int8-encode and
+int8-decode+scatter run as one device program each, bit-identical to
+gather→encode / decode→write on the numpy tables (the codec is
+row-independent and the pad columns stay zero).
 """
 
 from __future__ import annotations
@@ -31,17 +41,32 @@ from .cost_model import NetworkModel, TransferLog
 
 class EmbeddingServer:
     def __init__(self, num_layers: int, hidden: int,
-                 net: NetworkModel | None = None):
+                 net: NetworkModel | None = None, *,
+                 device_tables: bool = False):
         assert num_layers >= 2, "embedding sharing needs L >= 2"
         self.L = num_layers
         self.hidden = hidden
         self.net = net or NetworkModel()
+        self.device_tables = bool(device_tables)
+        if self.device_tables:
+            from repro.kernels.quantize import pad_hidden
+            self._hp = pad_hidden(hidden)      # lane-aligned column count
+        else:
+            self._hp = hidden
         self._row: dict[int, int] = {}         # global id -> row
+        #: dense gid → row map (-1 = unregistered): the vectorized
+        #: translation behind ``_rows``, kept in sync by
+        #: register/forget — no per-id python dict scan on the hot path
+        self._gid2row = np.full(0, -1, np.int64)
         self._next_row = 0                     # rows handed out so far
         self._cap = 0                          # allocated rows per table
-        self._bufs: list[np.ndarray] = [
-            np.zeros((0, hidden), np.float32) for _ in range(num_layers - 1)
-        ]
+        if self.device_tables:
+            import jax.numpy as jnp
+            self._bufs = [jnp.zeros((0, self._hp), jnp.float32)
+                          for _ in range(num_layers - 1)]
+        else:
+            self._bufs = [np.zeros((0, hidden), np.float32)
+                          for _ in range(num_layers - 1)]
         self._ver = np.zeros(0, np.int64)      # per-row write counter
         self._reallocs = 0                     # growth events (O(log n))
         self.log = TransferLog()
@@ -50,23 +75,41 @@ class EmbeddingServer:
 
     def _ensure_capacity(self, rows: int) -> None:
         """Capacity-doubling growth: amortized O(1) per registered row
-        instead of the quadratic rebuild-every-call np.concatenate."""
+        instead of the quadratic rebuild-every-call np.concatenate.
+        Device tables start at 256 rows so capacity always lands on a
+        row bucket (power of two) — the fused kernels' ``pad_rows`` is
+        then a no-op on the whole table."""
         if rows <= self._cap:
             return
-        new_cap = max(16, self._cap)
+        new_cap = max(256 if self.device_tables else 16, self._cap)
         while new_cap < rows:
             new_cap *= 2
-        grown = []
-        for buf in self._bufs:
-            g = np.zeros((new_cap, self.hidden), np.float32)
-            g[: self._next_row] = buf[: self._next_row]
-            grown.append(g)
-        self._bufs = grown
+        if self.device_tables:
+            import jax.numpy as jnp
+            self._bufs = [
+                jnp.zeros((new_cap, self._hp), jnp.float32)
+                .at[: self._next_row].set(buf[: self._next_row])
+                for buf in self._bufs]
+        else:
+            grown = []
+            for buf in self._bufs:
+                g = np.zeros((new_cap, self.hidden), np.float32)
+                g[: self._next_row] = buf[: self._next_row]
+                grown.append(g)
+            self._bufs = grown
         ver = np.zeros(new_cap, np.int64)
         ver[: self._next_row] = self._ver[: self._next_row]
         self._ver = ver
         self._cap = new_cap
         self._reallocs += 1
+
+    def _ensure_gid_map(self, max_gid: int) -> None:
+        if max_gid < len(self._gid2row):
+            return
+        grown = np.full(max(max_gid + 1, 2 * len(self._gid2row), 16),
+                        -1, np.int64)
+        grown[: len(self._gid2row)] = self._gid2row
+        self._gid2row = grown
 
     def register(self, global_ids: np.ndarray) -> None:
         """Make rows for vertices whose embeddings will be shared."""
@@ -75,8 +118,11 @@ class EmbeddingServer:
             return
         base = self._next_row
         self._ensure_capacity(base + len(new))
+        self._ensure_gid_map(max(new))
         for i, gid in enumerate(new):
             self._row[gid] = base + i
+        self._gid2row[np.asarray(new, np.int64)] = \
+            base + np.arange(len(new), dtype=np.int64)
         self._next_row = base + len(new)
 
     def forget(self, global_ids: np.ndarray) -> None:
@@ -86,13 +132,16 @@ class EmbeddingServer:
         correctness (``register`` hands out fresh rows past it)."""
         for g in np.unique(global_ids):
             self._row.pop(int(g), None)
+            if 0 <= g < len(self._gid2row):
+                self._gid2row[int(g)] = -1
 
     @property
     def _tables(self) -> list[np.ndarray]:
         """Logical (allocated-rows) views of the capacity buffers.
-        Writes through a view hit the backing buffer."""
+        Writes through a view hit the backing buffer (numpy mode; device
+        tables are immutable jax Arrays)."""
         n = self._next_row
-        return [buf[:n] for buf in self._bufs]
+        return [buf[:n, : self.hidden] for buf in self._bufs]
 
     @property
     def num_embeddings_stored(self) -> int:
@@ -105,20 +154,26 @@ class EmbeddingServer:
         return sum(buf.nbytes for buf in self._bufs)
 
     def _rows(self, global_ids: np.ndarray) -> np.ndarray:
-        try:
-            return np.fromiter((self._row[int(g)] for g in global_ids),
-                               dtype=np.int64, count=len(global_ids))
-        except KeyError:
-            missing = [int(g) for g in global_ids
-                       if int(g) not in self._row]
-            shown = ", ".join(str(g) for g in missing[:8])
-            if len(missing) > 8:
-                shown += f", ... ({len(missing) - 8} more)"
-            raise KeyError(
-                f"{len(missing)} unregistered vertex id(s) in a request "
-                f"of {len(global_ids)} (gids: {shown}); this server has "
-                f"{len(self._row)} registered rows — register() boundary "
-                "vertices before write/gather") from None
+        gids = np.asarray(global_ids, np.int64)
+        if len(gids) == 0:
+            return np.zeros(0, np.int64)
+        m = self._gid2row
+        if len(m):
+            safe = np.clip(gids, 0, len(m) - 1)
+            rows = np.where((gids >= 0) & (gids < len(m)), m[safe], -1)
+        else:
+            rows = np.full(len(gids), -1, np.int64)
+        if np.all(rows >= 0):
+            return rows
+        missing = [int(g) for g in gids[rows < 0]]
+        shown = ", ".join(str(g) for g in missing[:8])
+        if len(missing) > 8:
+            shown += f", ... ({len(missing) - 8} more)"
+        raise KeyError(
+            f"{len(missing)} unregistered vertex id(s) in a request "
+            f"of {len(global_ids)} (gids: {shown}); this server has "
+            f"{len(self._row)} registered rows — register() boundary "
+            "vertices before write/gather")
 
     # -- storage surface (used by repro.exchange transports) ----------------
 
@@ -129,21 +184,76 @@ class EmbeddingServer:
         if len(global_ids) == 0:
             return
         rows = self._rows(global_ids)
-        for buf, vals in zip(self._bufs, layer_values):
-            buf[rows] = np.asarray(vals, np.float32)
+        if self.device_tables:
+            import jax.numpy as jnp
+            rj = jnp.asarray(rows)
+            self._bufs = [
+                buf.at[rj, : self.hidden].set(
+                    jnp.asarray(vals, jnp.float32))
+                for buf, vals in zip(self._bufs, layer_values)]
+        else:
+            for buf, vals in zip(self._bufs, layer_values):
+                buf[rows] = np.asarray(vals, np.float32)
         self._ver[rows] += 1
 
     def gather(self, global_ids: np.ndarray,
                layers: list[int] | None = None) -> list[np.ndarray]:
         """Raw read of the selected layer tables — no wire accounting.
         ``layers`` is 1-indexed; ``None`` means all L-1; ``[]`` means
-        none (and returns an empty list)."""
+        none (and returns an empty list).  Device tables return jax
+        Arrays (same values — callers convert at most once)."""
         sel = list(range(1, self.L)) if layers is None else list(layers)
         if len(global_ids) == 0:
             return [np.zeros((0, self.hidden), np.float32) for _ in sel]
         rows = self._rows(global_ids)
+        if self.device_tables:
+            import jax.numpy as jnp
+            rj = jnp.asarray(rows)
+            return [jnp.take(self._bufs[l - 1], rj, axis=0)[:, : self.hidden]
+                    for l in sel]
         # fancy indexing already allocates fresh arrays — no copy needed
         return [self._bufs[l - 1][rows] for l in sel]
+
+    # -- fused device surface (repro.kernels.exchange_fused) ----------------
+
+    def gather_quantized(self, global_ids: np.ndarray,
+                         layers: list[int] | None = None
+                         ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Pull response in wire form: one (values int8 (n, hidden),
+        scales fp32 (n, 1)) pair per selected layer, bit-identical to
+        ``quantize_int8(gather(...))``.  On device tables the gather and
+        the encode run as one fused program over the resident table."""
+        from repro.kernels import ops
+        sel = list(range(1, self.L)) if layers is None else list(layers)
+        if len(global_ids) == 0:
+            return [(np.zeros((0, self.hidden), np.int8),
+                     np.zeros((0, 1), np.float32)) for _ in sel]
+        rows = self._rows(global_ids)
+        out = []
+        for l in sel:
+            v, s = ops.gather_quantize(self._bufs[l - 1], rows)
+            out.append((v[:, : self.hidden], s))
+        return out
+
+    def write_quantized(self, global_ids: np.ndarray,
+                        layer_payloads: list[tuple]) -> None:
+        """Push apply straight from wire form: decode int8 rows and
+        store them, one fused dequant+scatter program per layer table on
+        device tables — bit-identical to ``write(decode(payload))``."""
+        assert len(layer_payloads) == self.L - 1
+        if len(global_ids) == 0:
+            return
+        rows = self._rows(global_ids)
+        if self.device_tables:
+            from repro.kernels import ops
+            self._bufs = [
+                ops.dequant_scatter(buf, rows, v, s)
+                for buf, (v, s) in zip(self._bufs, layer_payloads)]
+        else:
+            for buf, (v, s) in zip(self._bufs, layer_payloads):
+                buf[rows] = np.asarray(v).astype(np.float32) \
+                    * np.asarray(s, np.float32)
+        self._ver[rows] += 1
 
     def versions(self, global_ids: np.ndarray) -> np.ndarray:
         """Current write counters for ``global_ids`` (int64, one per row
@@ -172,7 +282,13 @@ class EmbeddingServer:
         rows = self._rows(global_ids)
         ver = self._ver[rows].copy()
         stale = np.nonzero(ver != np.asarray(have_versions, np.int64))[0]
-        vals = [self._bufs[l - 1][rows[stale]] for l in sel]
+        if self.device_tables:
+            import jax.numpy as jnp
+            rj = jnp.asarray(rows[stale])
+            vals = [jnp.take(self._bufs[l - 1], rj, axis=0)[:, : self.hidden]
+                    for l in sel]
+        else:
+            vals = [self._bufs[l - 1][rows[stale]] for l in sel]
         return ver, stale.astype(np.int64), vals
 
     # -- RPC surface ---------------------------------------------------------

@@ -43,6 +43,10 @@ class PushPlan:
     # real-wire plans carry raw rows in layer_values (the socket does
     # the encoding), so the decoded view EF needs rides separately
     ef_decoded: list[np.ndarray] | None = None
+    # device-table transports apply the push in wire form (fused
+    # decode+scatter): the encoded payload rides the plan so apply_push
+    # never re-encodes; decoding it equals layer_values bit-exactly
+    payloads: list | None = None
 
 
 class ExchangeClient:
@@ -72,6 +76,14 @@ class ExchangeClient:
     def register(self, global_ids: np.ndarray) -> None:
         self.transport.register(global_ids)
 
+    def _fused_int8(self) -> bool:
+        """True when pulls/pushes should ride the fused quantized
+        surface: int8 codec over a modelled transport whose tables live
+        on device (gather+encode / decode+scatter as one program)."""
+        return (self.codec.name == "int8"
+                and not self.transport.wire_is_real
+                and self.transport.device_tables)
+
     # -- pull side ---------------------------------------------------------
 
     def peek(self, global_ids: np.ndarray,
@@ -81,7 +93,14 @@ class ExchangeClient:
         Modelled transports return raw table rows, so the crossing is
         simulated with a codec roundtrip here; a real-wire transport
         (TcpTransport) already codec-encoded the gather on the socket,
-        and a second roundtrip would double-quantize."""
+        and a second roundtrip would double-quantize.  Device-table
+        transports with an int8 codec serve the crossing fused
+        (gather+encode on the resident table, decode on device) —
+        bit-identical values, converted to host exactly once here."""
+        if self._fused_int8():
+            payloads = self.transport.gather_quantized(global_ids, layers)
+            return [np.asarray(self.codec.decode_dev(p), np.float32)
+                    for p in payloads]
         raw = self.transport.gather(global_ids, layers)
         if self.transport.wire_is_real:
             return [np.asarray(v, np.float32) for v in raw]
@@ -149,10 +168,16 @@ class ExchangeClient:
         # decoded view locally (codecs are deterministic, so this local
         # roundtrip equals what the server stores from the socket bytes).
         ef_decoded = None
+        payloads = None
         if self.transport.wire_is_real:
             decoded = raw
             if self.ef is not None:
                 ef_decoded = [self.codec.roundtrip(v) for v in raw]
+        elif self._fused_int8():
+            # encode once here; apply_push ships the wire form to the
+            # fused decode+scatter (decoding it == `decoded` bit-exactly)
+            payloads = [self.codec.encode(v) for v in raw]
+            decoded = [self.codec.decode(p) for p in payloads]
         else:
             decoded = [self.codec.roundtrip(v) for v in raw]
         t = self.transport.transfer_time(global_ids, self.shared_layers,
@@ -162,14 +187,17 @@ class ExchangeClient:
                         layer_values=decoded, raw_values=raw,
                         transfer_time=t,
                         n_selected=len(global_ids), n_total=n_total,
-                        ef_decoded=ef_decoded)
+                        ef_decoded=ef_decoded, payloads=payloads)
 
     def apply_push(self, plan: PushPlan) -> float:
         """Commit a planned push: store what the server decodes, refresh
         the delta shadow, record the transfer in the shard logs."""
         if plan.n_selected == 0:
             return 0.0
-        self.transport.write(plan.global_ids, plan.layer_values)
+        if plan.payloads is not None:
+            self.transport.write_quantized(plan.global_ids, plan.payloads)
+        else:
+            self.transport.write(plan.global_ids, plan.layer_values)
         if self.delta is not None:
             self.delta.commit(plan.global_ids, plan.raw_values)
         if self.ef is not None:

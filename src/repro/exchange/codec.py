@@ -47,6 +47,34 @@ class WireCodec(abc.ABC):
         """The values the far side sees after one wire crossing."""
         return self.decode(self.encode(x))
 
+    # -- device path (jax Arrays end to end) --------------------------------
+
+    def encode_dev(self, x):
+        """Device-path encode: jax Array in → jax wire array(s) out,
+        value-identical to :meth:`encode`.  The base implementation
+        stages through the host encode; codecs with a real device
+        kernel (int8) override it."""
+        import jax.numpy as jnp
+        payload = self.encode(np.asarray(x, np.float32))
+        if isinstance(payload, tuple):
+            return tuple(jnp.asarray(p) for p in payload)
+        return jnp.asarray(payload)
+
+    def decode_dev(self, payload):
+        """Device-path decode: wire array(s) → fp32 jax Array,
+        value-identical to :meth:`decode`."""
+        import jax.numpy as jnp
+        if isinstance(payload, tuple):
+            payload = tuple(np.asarray(p) for p in payload)
+        else:
+            payload = np.asarray(payload)
+        return jnp.asarray(np.asarray(self.decode(payload), np.float32))
+
+    def roundtrip_dev(self, x):
+        """Device-path wire crossing — bit-identical values to
+        :meth:`roundtrip` (codecs are deterministic)."""
+        return self.decode_dev(self.encode_dev(x))
+
     def __repr__(self) -> str:
         return f"{type(self).__name__}()"
 
@@ -106,6 +134,21 @@ class Int8Codec(WireCodec):
         return np.asarray(
             ops.dequantize_int8(values, scales, use_pallas=self.use_pallas),
             np.float32)
+
+    def encode_dev(self, x):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+        return ops.quantize_int8(jnp.asarray(x, jnp.float32),
+                                 use_pallas=self.use_pallas)
+
+    def decode_dev(self, payload):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+        values, scales = payload
+        return ops.dequantize_int8(jnp.asarray(values), jnp.asarray(scales),
+                                   use_pallas=self.use_pallas)
 
     def bytes_per_scalar(self, hidden: int) -> float:
         return 1.0 + 4.0 / hidden          # int8 row + one fp32 scale

@@ -41,6 +41,27 @@ class Transport(abc.ABC):
     #: happened — keeping numerics bit-identical to modelled transports.
     wire_is_real: bool = False
 
+    #: True when the backing EmbeddingServer(s) hold device-resident
+    #: tables, which makes the fused quantized surface below the cheap
+    #: path (ExchangeClient routes int8 pulls/pushes through it).
+    device_tables: bool = False
+
+    def gather_quantized(self, global_ids: np.ndarray,
+                         layers: list[int] | None = None) -> list[tuple]:
+        """Fused pull response: per selected layer, (values int8
+        (n, hidden), scales fp32 (n, 1)) in original id order —
+        bit-identical to int8-encoding :meth:`gather`'s rows (the codec
+        is row-independent, so shard splits can't change the values)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no fused quantized surface")
+
+    def write_quantized(self, global_ids: np.ndarray,
+                        layer_payloads: list[tuple]) -> None:
+        """Fused push apply: store int8 payload rows via
+        decode+scatter — bit-identical to ``write(decode(payload))``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no fused quantized surface")
+
     # -- storage -----------------------------------------------------------
 
     @abc.abstractmethod
@@ -113,11 +134,14 @@ class InProcessTransport(Transport):
     num_shards = 1
 
     def __init__(self, num_layers: int, hidden: int,
-                 net: NetworkModel | None = None):
+                 net: NetworkModel | None = None, *,
+                 device_tables: bool = False):
         self.num_layers = num_layers
         self.hidden = hidden
         self.net = net or NetworkModel()
-        self.server = EmbeddingServer(num_layers, hidden, self.net)
+        self.device_tables = bool(device_tables)
+        self.server = EmbeddingServer(num_layers, hidden, self.net,
+                                      device_tables=device_tables)
         self._log = TransferLog()
 
     def register(self, global_ids):
@@ -128,6 +152,12 @@ class InProcessTransport(Transport):
 
     def gather(self, global_ids, layers=None):
         return self.server.gather(global_ids, layers)
+
+    def gather_quantized(self, global_ids, layers=None):
+        return self.server.gather_quantized(global_ids, layers)
+
+    def write_quantized(self, global_ids, layer_payloads):
+        self.server.write_quantized(global_ids, layer_payloads)
 
     def gather_versioned(self, global_ids, have_versions, layers=None):
         return self.server.gather_if_stale(global_ids, have_versions, layers)
@@ -241,16 +271,19 @@ class ShardedTransport(HashShardedWire, Transport):
     never numerics."""
 
     def __init__(self, num_layers: int, hidden: int, num_shards: int,
-                 nets: list[NetworkModel] | NetworkModel | None = None):
+                 nets: list[NetworkModel] | NetworkModel | None = None, *,
+                 device_tables: bool = False):
         assert num_shards >= 1
         self.num_layers = num_layers
         self.hidden = hidden
         self.num_shards = num_shards
+        self.device_tables = bool(device_tables)
         if nets is None or isinstance(nets, NetworkModel):
             nets = [nets or NetworkModel()] * num_shards
         assert len(nets) == num_shards, "one NetworkModel per shard"
         self.nets = list(nets)
-        self.shards = [EmbeddingServer(num_layers, hidden, net)
+        self.shards = [EmbeddingServer(num_layers, hidden, net,
+                                       device_tables=device_tables)
                        for net in self.nets]
         self._logs = [TransferLog() for _ in range(num_shards)]
         #: per-gid gather tally, fed to rebalance_by_pulls.  Off by
@@ -336,6 +369,45 @@ class ShardedTransport(HashShardedWire, Transport):
                 o[pos] = p
         return out
 
+    def gather_quantized(self, global_ids, layers=None):
+        """Per-shard fused gather+encode, recombined in id order.  The
+        codec is row-independent, so quantize-then-combine equals
+        combine-then-quantize — sharding can't change the wire values."""
+        self._count_pulls(global_ids)
+        sel = list(range(1, self.num_layers)) if layers is None \
+            else list(layers)
+        global_ids = np.asarray(global_ids)
+        n = len(global_ids)
+        parts = self._split(global_ids)
+        if self.device_tables:
+            import jax.numpy as jnp
+            vs = [jnp.zeros((n, self.hidden), jnp.int8) for _ in sel]
+            ss = [jnp.zeros((n, 1), jnp.float32) for _ in sel]
+            for s, pos in parts:
+                pj = jnp.asarray(pos)
+                for j, (v, sc) in enumerate(
+                        self.shards[s].gather_quantized(global_ids[pos],
+                                                        sel)):
+                    vs[j] = vs[j].at[pj].set(v)
+                    ss[j] = ss[j].at[pj].set(sc)
+            return list(zip(vs, ss))
+        vs = [np.zeros((n, self.hidden), np.int8) for _ in sel]
+        ss = [np.zeros((n, 1), np.float32) for _ in sel]
+        for s, pos in parts:
+            for j, (v, sc) in enumerate(
+                    self.shards[s].gather_quantized(global_ids[pos], sel)):
+                vs[j][pos] = np.asarray(v)
+                ss[j][pos] = np.asarray(sc)
+        return list(zip(vs, ss))
+
+    def write_quantized(self, global_ids, layer_payloads):
+        global_ids = np.asarray(global_ids)
+        for s, pos in self._split(global_ids):
+            self.shards[s].write_quantized(
+                global_ids[pos],
+                [(np.asarray(v)[pos], np.asarray(sc)[pos])
+                 for v, sc in layer_payloads])
+
     def gather_versioned(self, global_ids, have_versions, layers=None):
         sel = list(range(1, self.num_layers)) if layers is None \
             else list(layers)
@@ -369,7 +441,8 @@ class ShardedTransport(HashShardedWire, Transport):
 def make_transport(num_layers: int, hidden: int, *, kind: str = "auto",
                    num_shards: int = 1,
                    nets: list[NetworkModel] | NetworkModel | None = None,
-                   addrs=None, codec: str = "fp32") -> Transport:
+                   addrs=None, codec: str = "fp32",
+                   device_tables: bool = False) -> Transport:
     """Factory the trainer uses.
 
     ``kind`` selects the wire: ``"inprocess"`` (single modelled link,
@@ -379,12 +452,22 @@ def make_transport(num_layers: int, hidden: int, *, kind: str = "auto",
     ``codec`` payloads).  The default ``"auto"`` keeps the historical
     inference: addresses given → tcp, ``num_shards`` > 1 → sharded,
     else in-process.
+
+    ``device_tables=True`` puts the in-process servers' tables on
+    device (jax Arrays) and routes int8 pulls/pushes through the fused
+    kernels — bit-identical values, no host staging.  A TCP server
+    opts in on its own side (``embed_server --device-tables``), so the
+    flag is rejected for ``kind='tcp'``.
     """
     if kind == "auto":
         kind = "tcp" if addrs else \
             ("sharded" if num_shards > 1 else "inprocess")
     if kind == "tcp":
         from .socket_transport import TcpTransport   # lazy: socket machinery
+        if device_tables:
+            raise ValueError("device_tables is a server-side choice for "
+                             "kind='tcp' — start the listener with "
+                             "embed_server --device-tables instead")
         if not addrs:
             raise ValueError("kind='tcp' needs addrs=[(host, port), ...] "
                              "— one embed_server listener per shard")
@@ -403,8 +486,10 @@ def make_transport(num_layers: int, hidden: int, *, kind: str = "auto",
             assert len(nets) == 1, \
                 f"{len(nets)} NetworkModels for a single-shard transport"
             nets = nets[0]
-        return InProcessTransport(num_layers, hidden, nets)
+        return InProcessTransport(num_layers, hidden, nets,
+                                  device_tables=device_tables)
     if kind == "sharded":
-        return ShardedTransport(num_layers, hidden, num_shards, nets)
+        return ShardedTransport(num_layers, hidden, num_shards, nets,
+                                device_tables=device_tables)
     raise ValueError(f"unknown transport kind {kind!r}; "
                      "expected inprocess | sharded | tcp")

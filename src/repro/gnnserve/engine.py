@@ -258,11 +258,14 @@ class ShardServeEngine:
             gids = self.shard.global_ids[inp]
             rows, _ = self.cache.get(gids, L - d)
             self.rows_in += len(gids)
-            h_in = np.zeros((self._p_nodes[d], self.hidden), np.float32)
-            h_in[: len(inp)] = rows
+            # stored rows convert host→device exactly once; the pad to
+            # the static block shape is a device scatter, not an
+            # np.zeros staging buffer re-copied per forward
+            h_in = jnp.zeros((self._p_nodes[d], self.hidden), jnp.float32) \
+                .at[: len(inp)].set(jnp.asarray(rows, jnp.float32))
             caches = [self._ctbl[l - 1] for l in range(start, L)]
             logits = _logits_suffix(self.params[start - 1:], batch,
-                                    jnp.asarray(h_in), caches,
+                                    h_in, caches,
                                     conv=self.conv, start=start, L=L)
         return np.asarray(logits)
 

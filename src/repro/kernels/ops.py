@@ -8,8 +8,10 @@ to validate the kernel bodies on CPU.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from . import exchange_fused as _fused
 from . import gnn_aggregate as _agg
 from . import quantize as _quant
 from . import ref
@@ -87,6 +89,75 @@ def dequantize_int8(values, scales, *, use_pallas="auto"):
     return ref.dequantize_int8(values, scales)
 
 
+def _np_gather_quantize(table: np.ndarray, rows
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Numpy fused gather+quantize (host tables): fancy-index then the
+    op-for-op numpy encode — bit-identical to the device paths."""
+    rows = np.asarray(rows, np.int64)
+    return _np_quantize_int8(np.asarray(table, np.float32)[rows])
+
+
+def _np_dequant_scatter(table: np.ndarray, rows, values, scales, *,
+                        accumulate: bool = False) -> np.ndarray:
+    """Numpy fused dequant+scatter.  Functional (returns a fresh table)
+    to match the device paths — callers rebind."""
+    out = np.array(table, np.float32, copy=True)
+    rows = np.asarray(rows, np.int64)
+    new = np.asarray(values).astype(np.float32) \
+        * np.asarray(scales, np.float32)
+    if accumulate:
+        np.add.at(out, rows, new)
+    else:
+        out[rows] = new
+    return out
+
+
+def gather_quantize(table, rows, *, use_pallas="auto"):
+    """Fused row-gather + int8 encode (pull responses): bit-identical to
+    ``quantize_int8(table[rows])``.  Numpy tables take the numpy fused
+    path; device tables run the jitted bucket-padded jnp twin off-TPU
+    and the Pallas kernel on TPU (interpret mode when forced on CPU)."""
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _fused.gather_quantize(table, rows, interpret=interp)
+    if isinstance(table, np.ndarray):
+        return _np_gather_quantize(table, rows)
+    return _fused.gather_quantize(table, rows, via="jnp")
+
+
+def dequant_scatter(table, rows, values, scales, *, accumulate=False,
+                    use_pallas="auto"):
+    """Fused int8 decode + scatter-write/accumulate (push apply).
+    Functional: returns the updated table; callers rebind.  Valid rows
+    must be unique for ``accumulate=False``."""
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _fused.dequant_scatter(table, rows, values, scales,
+                                      accumulate=accumulate,
+                                      interpret=interp)
+    if isinstance(table, np.ndarray):
+        return _np_dequant_scatter(table, rows, values, scales,
+                                   accumulate=accumulate)
+    return _fused.dequant_scatter(table, rows, values, scales,
+                                  accumulate=accumulate, via="jnp")
+
+
+def dequant_aggregate(src_values, src_scales, ell_idx, ell_mask, *,
+                      use_pallas="auto"):
+    """ELL mean-aggregation over an int8 source table, bit-identical to
+    ``gnn_aggregate(dequantize_int8(values, scales), idx, mask)``.  The
+    non-Pallas path routes to the jnp oracle (not a numpy mirror) so the
+    reduction order matches :func:`gnn_aggregate`'s dispatch exactly."""
+    use, interp = _resolve(use_pallas)
+    if use:
+        return _agg.dequant_aggregate(src_values, src_scales, ell_idx,
+                                      ell_mask, interpret=interp)
+    return ref.dequant_aggregate(jnp.asarray(src_values),
+                                 jnp.asarray(src_scales),
+                                 jnp.asarray(ell_idx),
+                                 jnp.asarray(ell_mask))
+
+
 def topk_mask(scores, k, *, use_pallas="auto"):
     use, interp = _resolve(use_pallas)
     if use:
@@ -97,12 +168,22 @@ def topk_mask(scores, k, *, use_pallas="auto"):
 def ell_from_csr(indptr: np.ndarray, indices: np.ndarray, max_deg: int
                  ) -> tuple[np.ndarray, np.ndarray]:
     """CSR → ELL (idx, mask), truncating rows past ``max_deg`` (the
-    sampler's fanout bound makes truncation a no-op in practice)."""
+    sampler's fanout bound makes truncation a no-op in practice).
+
+    Fully vectorized — a repeat/cumcount construction instead of the
+    per-row python loop, which was O(V) interpreter time on the
+    minibatch path for store-scale graphs."""
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices)
     n = len(indptr) - 1
     idx = np.zeros((n, max_deg), np.int32)
     mask = np.zeros((n, max_deg), bool)
-    for u in range(n):
-        row = indices[indptr[u]: indptr[u + 1]][:max_deg]
-        idx[u, : len(row)] = row
-        mask[u, : len(row)] = True
+    deg = np.minimum(np.diff(indptr), max_deg)
+    rows = np.repeat(np.arange(n), deg)
+    if rows.size:
+        # cumcount: position of each kept entry within its row
+        col = np.arange(rows.size) - np.repeat(np.cumsum(deg) - deg, deg)
+        src = indices[np.repeat(indptr[:-1], deg) + col]
+        idx[rows, col] = src
+        mask[rows, col] = True
     return idx, mask

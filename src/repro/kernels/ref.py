@@ -60,6 +60,39 @@ def dequantize_int8(values: jax.Array, scales: jax.Array) -> jax.Array:
     return values.astype(jnp.float32) * scales.astype(jnp.float32)
 
 
+# -- fused exchange-plane ops (oracles for kernels.exchange_fused) ------------
+
+def gather_quantize(table: jax.Array, rows: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Row gather fused with the int8 encode: the unfused two-step
+    ``quantize_int8(table[rows])``, which the fused kernel must match
+    bit-exactly (per-row quantization sees identical fp32 inputs)."""
+    return quantize_int8(jnp.take(table.astype(jnp.float32),
+                                  jnp.asarray(rows), axis=0))
+
+
+def dequant_scatter(table: jax.Array, rows: jax.Array, values: jax.Array,
+                    scales: jax.Array, *, accumulate: bool = False
+                    ) -> jax.Array:
+    """int8 decode fused with scatter into ``table`` at ``rows``:
+    overwrite (push apply) or accumulate.  Returns the updated table."""
+    new = dequantize_int8(values, scales)
+    tbl = table.astype(jnp.float32)
+    rows = jnp.asarray(rows)
+    if accumulate:
+        return tbl.at[rows].add(new)
+    return tbl.at[rows].set(new)
+
+
+def dequant_aggregate(src_values: jax.Array, src_scales: jax.Array,
+                      ell_idx: jax.Array, ell_mask: jax.Array) -> jax.Array:
+    """Mean aggregation straight off the wire form: dequantize the int8
+    source table, then :func:`gnn_aggregate` — the two-step host path
+    the fused kernel replaces."""
+    return gnn_aggregate(dequantize_int8(src_values, src_scales),
+                         ell_idx, ell_mask)
+
+
 def topk_mask(scores: jax.Array, k: int) -> jax.Array:
     """Boolean mask of the k largest entries (ties broken towards keeping
     ≥ k entries — the threshold semantics the bisection kernel provides)."""

@@ -44,8 +44,10 @@ from repro.exchange.codec import get_codec
 class _ServerState:
     """Shared state of one listener: the tables + their lock."""
 
-    def __init__(self, num_layers: int, hidden: int):
-        self.store = EmbeddingServer(num_layers, hidden)
+    def __init__(self, num_layers: int, hidden: int, *,
+                 device_tables: bool = False):
+        self.store = EmbeddingServer(num_layers, hidden,
+                                     device_tables=device_tables)
         self.lock = threading.Lock()
         self.stop = threading.Event()
 
@@ -94,17 +96,34 @@ class _ServerState:
                 f"write payload is {len(buf)} B, expected "
                 f"{block * req['num_blocks']} B "
                 f"({req['num_blocks']}×{block})")
+        fused = codec == "int8" and self.store.device_tables
         for l in range(req["num_blocks"]):
             payload = wire.decode_block(codec, buf[l * block:(l + 1) * block],
                                         n, hidden)
-            values.append(np.asarray(cdc.decode(payload), np.float32))
+            if fused:
+                # ship the wire form straight to the fused decode+scatter
+                # — the payload crosses host→device exactly once
+                values.append(tuple(np.ascontiguousarray(p)
+                                    for p in payload))
+            else:
+                values.append(np.asarray(cdc.decode(payload), np.float32))
         with self.lock:
-            self.store.write(gids, values)
+            if fused:
+                self.store.write_quantized(gids, values)
+            else:
+                self.store.write(gids, values)
         return wire.build_ok()
 
     def _handle_gather(self, req: dict) -> bytes:
         codec, gids = req["codec"], req["global_ids"]
         cdc = get_codec(codec)
+        if codec == "int8" and self.store.device_tables:
+            # fused gather+encode on the resident table; the device→host
+            # crossing happens once, inside encode_block's tobytes
+            with self.lock:
+                payloads = self.store.gather_quantized(gids, req["layers"])
+            blocks = [wire.encode_block(codec, p) for p in payloads]
+            return wire.build_ok(b"".join(blocks))
         with self.lock:
             rows = self.store.gather(gids, req["layers"])
         blocks = [wire.encode_block(codec, cdc.encode(r)) for r in rows]
@@ -194,10 +213,11 @@ def _accept_loop(listener: socket.socket, state: _ServerState) -> None:
 
 def serve_in_thread(num_layers: int, hidden: int, *,
                     host: str = "127.0.0.1",
-                    port: int = 0) -> EmbedServerHandle:
+                    port: int = 0,
+                    device_tables: bool = False) -> EmbedServerHandle:
     """Start one shard listener on a background thread (ephemeral port
     by default) and return its handle."""
-    state = _ServerState(num_layers, hidden)
+    state = _ServerState(num_layers, hidden, device_tables=device_tables)
     listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     listener.bind((host, port))
@@ -209,11 +229,13 @@ def serve_in_thread(num_layers: int, hidden: int, *,
 
 
 def serve(num_layers: int, hidden: int, *, host: str = "127.0.0.1",
-          port: int = 7040) -> None:
+          port: int = 7040, device_tables: bool = False) -> None:
     """Blocking single-shard server (the CLI entrypoint)."""
-    handle = serve_in_thread(num_layers, hidden, host=host, port=port)
+    handle = serve_in_thread(num_layers, hidden, host=host, port=port,
+                             device_tables=device_tables)
     print(f"embed_server listening on {handle.host}:{handle.port} "
-          f"(L={num_layers}, hidden={hidden})", flush=True)
+          f"(L={num_layers}, hidden={hidden}"
+          f"{', device tables' if device_tables else ''})", flush=True)
     try:
         while not handle._state.stop.is_set():
             handle._state.stop.wait(0.5)
@@ -232,8 +254,13 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--num-layers", type=int, default=3,
                     help="GNN depth L; the server stores L-1 tables")
     ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--device-tables", action="store_true",
+                    help="hold the layer tables as device (jax) arrays "
+                         "and serve int8 gathers/writes through the "
+                         "fused kernels (bit-identical values)")
     args = ap.parse_args(argv)
-    serve(args.num_layers, args.hidden, host=args.host, port=args.port)
+    serve(args.num_layers, args.hidden, host=args.host, port=args.port,
+          device_tables=args.device_tables)
 
 
 if __name__ == "__main__":

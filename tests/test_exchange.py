@@ -425,3 +425,104 @@ def test_model_transfer_time_codec_aware():
     q = net.model_transfer_time(10_000, bytes_per_scalar=1.0)
     assert q < raw
     assert raw == net.model_transfer_time(10_000, bytes_per_scalar=4.0)
+
+
+# -- device-resident tables: fused int8 surface -------------------------------
+#
+# Acceptance: int8 push/pull through the device path (gather_quantized /
+# write_quantized riding ops.gather_quantize / ops.dequant_scatter) is
+# bit-identical to the numpy path, for every transport.  The TCP variant
+# lives in tests/test_wire.py next to the other live-socket parity tests.
+
+def _device_parity_transports(hidden):
+    return {
+        "inprocess": InProcessTransport(3, hidden, device_tables=True),
+        "sharded": ShardedTransport(3, hidden, 4, device_tables=True),
+    }
+
+
+@pytest.mark.parametrize("kind", ["inprocess", "sharded"])
+def test_device_tables_int8_bit_identical(kind):
+    """Full ExchangeClient rounds (delta-filtered push → peek) over
+    device tables == the numpy-table reference, bit for bit."""
+    hidden = 24
+    ref_t = InProcessTransport(3, hidden)
+    dev_t = _device_parity_transports(hidden)[kind]
+    ex_ref = ExchangeClient(ref_t, "int8", delta_threshold=0.05)
+    ex_dev = ExchangeClient(dev_t, "int8", delta_threshold=0.05)
+    assert ex_dev._fused_int8() and not ex_ref._fused_int8()
+    gids = np.random.default_rng(0).permutation(700)[:211]
+    rng = np.random.default_rng(1)
+    for _ in range(2):
+        vals = [rng.standard_normal((211, hidden)).astype(np.float32)
+                for _ in range(2)]
+        for ex in (ex_ref, ex_dev):
+            ex.register(gids)
+            ex.push(gids, vals)
+        for a, b in zip(ex_ref.peek(gids), ex_dev.peek(gids)):
+            np.testing.assert_array_equal(a, b)
+    # partial-layer pulls ride the fused surface too
+    for a, b in zip(ex_ref.peek(gids[:50], [1]), ex_dev.peek(gids[:50], [1])):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_make_transport_device_tables_flag():
+    t = make_transport(3, 8, kind="inprocess", device_tables=True)
+    assert t.device_tables
+    t = make_transport(3, 8, kind="sharded", num_shards=2,
+                       device_tables=True)
+    assert t.device_tables
+    with pytest.raises(ValueError, match="device.tables"):
+        make_transport(3, 8, kind="tcp", addrs=[("127.0.0.1", 1)],
+                       device_tables=True)
+
+
+def test_pull_dequant_aggregate_matches_host_path():
+    """e2e consumer chain: int8 pull in wire form → fused
+    dequant_aggregate == pull → host dequant → gnn_aggregate, bit for
+    bit.  This is the trainer's aggregation step staying on device."""
+    hidden = 32
+    tr = InProcessTransport(3, hidden, device_tables=True)
+    gids = np.arange(150)
+    rng = np.random.default_rng(4)
+    vals = [rng.standard_normal((150, hidden)).astype(np.float32)
+            for _ in range(2)]
+    tr.register(gids)
+    tr.write(gids, vals)
+    idx = rng.integers(0, 150, (60, 5)).astype(np.int32)
+    mask = rng.random((60, 5)) < 0.8
+    qv, qs = tr.gather_quantized(gids)[0]
+    fused = ops.dequant_aggregate(qv, qs, idx, mask)
+    host = ops.gnn_aggregate(
+        ops.dequantize_int8(jnp.asarray(qv), jnp.asarray(qs)),
+        jnp.asarray(idx), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(host))
+
+
+@pytest.mark.parametrize("device_tables", [False, True])
+def test_forget_then_register_reuses_rows(device_tables):
+    """Regression for the vectorized gid→row map: forget frees rows,
+    re-register must hand back consistent mappings (the dense _gid2row
+    array and the free-list stay in sync)."""
+    srv = EmbeddingServer(3, 8, device_tables=device_tables)
+    srv.register(np.arange(20))
+    vals = [np.full((20, 8), l + 1, np.float32) for l in range(2)]
+    srv.write(np.arange(20), vals)
+    srv.forget(np.arange(5, 15))
+    # old survivors still resolve to their values
+    np.testing.assert_array_equal(
+        srv.gather(np.array([0, 4, 15, 19]))[0], vals[0][[0, 4, 15, 19]])
+    # forgotten gids now raise
+    with pytest.raises(KeyError, match="7"):
+        srv.gather(np.array([7]))
+    # new registrations may land on freed rows; values must not bleed
+    srv.register(np.arange(100, 110))
+    fresh = srv.gather(np.arange(100, 110))
+    for layer in fresh:
+        np.testing.assert_array_equal(layer, 0)
+    new_vals = [np.full((10, 8), 9.0, np.float32) for _ in range(2)]
+    srv.write(np.arange(100, 110), new_vals)
+    np.testing.assert_array_equal(srv.gather(np.arange(100, 110))[1],
+                                  new_vals[1])
+    np.testing.assert_array_equal(
+        srv.gather(np.array([0, 4, 15, 19]))[0], vals[0][[0, 4, 15, 19]])

@@ -149,3 +149,182 @@ def test_ops_dispatch_cpu_defaults(small_shards):
     a = ops.topk_mask(scores, 10, use_pallas="auto")
     b = ops.topk_mask(scores, 10, use_pallas=True)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- fused exchange kernels: gather+quantize / dequant+scatter ----------------
+#
+# Odd shapes on purpose: rows not a ROW_TILE multiple, hidden off the
+# 128-lane boundary, empty row blocks, all-zero rows (scale 0).  Every
+# path — Pallas interpret, the jitted jnp twin, the numpy mirror — must
+# be bit-identical to the two-step oracle.
+
+from repro.kernels.exchange_fused import (dequant_scatter as fused_scatter,
+                                          gather_quantize as fused_gather)
+from repro.kernels.gnn_aggregate import dequant_aggregate as pallas_deagg
+from repro.kernels.quantize import (bucket_rows, quantize_int8,
+                                    quantize_padded, row_buckets)
+
+
+def _table_rows(R, h, n, seed, *, zero_row=False):
+    rng = np.random.default_rng(seed)
+    table = rng.standard_normal((R, h)).astype(np.float32) * 3
+    if zero_row and R:
+        table[R // 2] = 0.0
+    rows = rng.choice(R, size=n, replace=False).astype(np.int64)
+    return table, rows
+
+
+@pytest.mark.parametrize("R,n,h", [
+    (300, 123, 32),      # rows % ROW_TILE != 0, hidden % LANE != 0
+    (257, 257, 129),     # both off-boundary, n == R
+    (64, 0, 16),         # empty pull
+    (512, 300, 128),     # lane-aligned hidden, odd rows
+])
+def test_gather_quantize_paths_bit_identical(R, n, h):
+    table, rows = _table_rows(R, h, n, R + n + h, zero_row=True)
+    tdev = jnp.asarray(table)
+    wv, ws = ref.gather_quantize(tdev, jnp.asarray(rows))
+    for got_v, got_s in (
+        fused_gather(tdev, rows, interpret=True),          # Pallas body
+        fused_gather(tdev, rows, via="jnp"),               # jitted twin
+        ops._np_gather_quantize(table, rows),              # numpy mirror
+        ops.gather_quantize(tdev, rows, use_pallas="auto"),
+    ):
+        np.testing.assert_array_equal(np.asarray(got_v), np.asarray(wv))
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(ws))
+
+
+@pytest.mark.parametrize("accumulate", [False, True])
+@pytest.mark.parametrize("R,n,h", [
+    (300, 123, 32), (257, 100, 129), (64, 0, 16), (512, 300, 128),
+])
+def test_dequant_scatter_paths_bit_identical(R, n, h, accumulate):
+    table, rows = _table_rows(R, h, n, R + n + h + int(accumulate))
+    values, scales = ops._np_quantize_int8(
+        np.random.default_rng(7).standard_normal((n, h)).astype(np.float32))
+    values[n // 2:] = 0                      # all-zero rows survive decode
+    tdev = jnp.asarray(table)
+    want = ref.dequant_scatter(tdev, jnp.asarray(rows), jnp.asarray(values),
+                               jnp.asarray(scales), accumulate=accumulate)
+    for got in (
+        fused_scatter(tdev, rows, values, scales, accumulate=accumulate,
+                      interpret=True),
+        fused_scatter(tdev, rows, values, scales, accumulate=accumulate,
+                      via="jnp"),
+        ops._np_dequant_scatter(table, rows, values, scales,
+                                accumulate=accumulate),
+        ops.dequant_scatter(tdev, rows, values, scales,
+                            accumulate=accumulate, use_pallas="auto"),
+    ):
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 500), st.sampled_from([1, 32, 128, 129]),
+       st.integers(0, 10**6))
+def test_fused_exchange_property(R, h, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(0, R + 1))
+    table, rows = _table_rows(R, h, n, seed)
+    tdev = jnp.asarray(table)
+    gv, gs = fused_gather(tdev, rows, interpret=True)
+    wv, ws = ref.gather_quantize(tdev, jnp.asarray(rows))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    # scatter the gathered rows back: the stored fp32 equals the decode
+    out = fused_scatter(tdev, rows, np.asarray(gv), np.asarray(gs),
+                        interpret=True)
+    want = ref.dequant_scatter(tdev, jnp.asarray(rows), wv, ws)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_src,n_dst,k,h", [
+    (300, 100, 5, 32), (257, 257, 3, 129), (64, 30, 4, 128),
+])
+def test_dequant_aggregate_matches_two_step(n_src, n_dst, k, h):
+    """Fused dequant→ELL-mean == host dequant then gnn_aggregate, bit
+    for bit, on all dispatch paths."""
+    rng = np.random.default_rng(n_src + h)
+    values, scales = ops._np_quantize_int8(
+        rng.standard_normal((n_src, h)).astype(np.float32))
+    idx = rng.integers(0, n_src, (n_dst, k)).astype(np.int32)
+    mask = rng.random((n_dst, k)) < 0.7
+    feats = ops.dequantize_int8(jnp.asarray(values), jnp.asarray(scales),
+                                use_pallas="auto")
+    want = ops.gnn_aggregate(feats, jnp.asarray(idx), jnp.asarray(mask),
+                             use_pallas="auto")
+    for got in (
+        pallas_deagg(jnp.asarray(values), jnp.asarray(scales),
+                     jnp.asarray(idx), jnp.asarray(mask), interpret=True),
+        ops.dequant_aggregate(values, scales, idx, mask, use_pallas="auto"),
+    ):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- bucketed padding: retrace guard + boundary bit-identity ------------------
+
+def test_bucketed_quantize_retrace_guard():
+    """50 pushes with 50 distinct row counts compile at most one program
+    per bucket (the quantize program is keyed on the bucket shape, never
+    the row count)."""
+    h = 32
+    before = quantize_padded._cache_size()
+    rng = np.random.default_rng(0)
+    counts = rng.choice(np.arange(1, 4000), size=50, replace=False)
+    for n in counts:
+        x = jnp.asarray(rng.standard_normal((int(n), h)), jnp.float32)
+        quantize_int8(x, interpret=True)
+    grown = quantize_padded._cache_size() - before
+    assert grown <= len(row_buckets()), \
+        f"{grown} compiles for 50 row counts (buckets: {row_buckets()})"
+    assert grown <= len({bucket_rows(int(n)) for n in counts})
+
+
+@pytest.mark.parametrize("bucket", [256, 512])
+def test_bucket_boundary_bit_identity(bucket):
+    """n = bucket-1 / bucket / bucket+1 all round-trip bit-identically
+    to the numpy oracle — the pad rows never leak into real rows."""
+    h = 48
+    rng = np.random.default_rng(bucket)
+    for n in (bucket - 1, bucket, bucket + 1):
+        x = (rng.standard_normal((n, h)) * 2).astype(np.float32)
+        nv, ns = ops._np_quantize_int8(x)
+        for pv, ps in (quantize_int8(jnp.asarray(x), interpret=True),
+                       quantize_int8(x, interpret=True)):
+            assert pv.shape == (n, h) and ps.shape == (n, 1)
+            np.testing.assert_array_equal(np.asarray(pv), nv)
+            np.testing.assert_array_equal(np.asarray(ps), ns)
+
+
+# -- ell_from_csr: vectorized construction vs the reference loop --------------
+
+def _ell_from_csr_loop(indptr, indices, max_deg):
+    n = len(indptr) - 1
+    idx = np.zeros((n, max_deg), np.int32)
+    mask = np.zeros((n, max_deg), bool)
+    for v in range(n):
+        nbrs = indices[indptr[v]:indptr[v + 1]][:max_deg]
+        idx[v, :len(nbrs)] = nbrs
+        mask[v, :len(nbrs)] = True
+    return idx, mask
+
+
+@pytest.mark.parametrize("n,avg_deg,max_deg", [
+    (1, 0, 4), (50, 3, 5), (200, 12, 8), (97, 1, 1),
+])
+def test_ell_from_csr_matches_loop(n, avg_deg, max_deg):
+    rng = np.random.default_rng(n + max_deg)
+    deg = rng.poisson(avg_deg, n)
+    indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+    indices = rng.integers(0, n, indptr[-1]).astype(np.int32)
+    got = ops.ell_from_csr(indptr, indices, max_deg)
+    want = _ell_from_csr_loop(indptr, indices, max_deg)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+def test_ell_from_csr_empty_graph():
+    idx, mask = ops.ell_from_csr(np.zeros(1, np.int64),
+                                 np.zeros(0, np.int32), 4)
+    assert idx.shape == (0, 4) and mask.shape == (0, 4)

@@ -329,3 +329,33 @@ def test_trainer_push_rows_cached_consistent():
                for i, v in enumerate(sh.global_ids[:sh.num_local])}
         expect = np.array([g2l[int(v)] for v in sh.push_nodes], np.int64)
         np.testing.assert_array_equal(tr.push_rows[ci], expect)
+
+
+def test_tcp_device_tables_parity_int8():
+    """Acceptance: a device-table TCP server (fused gather+encode /
+    decode+scatter on resident jax tables) answers int8 pushes and
+    pulls bit-identically to numpy-table servers, through a full
+    ExchangeClient pipeline across delta-filtered rounds."""
+    handles = [serve_in_thread(3, 16, device_tables=True),
+               serve_in_thread(3, 16, device_tables=True)]
+    try:
+        assert all(h.store.device_tables for h in handles)
+        tcp = TcpTransport(3, 16, [h.address for h in handles],
+                           codec="int8")
+        inp = InProcessTransport(3, 16)
+        ex_t = ExchangeClient(tcp, "int8", delta_threshold=0.05)
+        ex_i = ExchangeClient(inp, "int8", delta_threshold=0.05)
+        gids = np.random.default_rng(0).permutation(500)[:123]
+        rng = np.random.default_rng(1)
+        for _ in range(2):
+            vals = [rng.standard_normal((123, 16)).astype(np.float32)
+                    for _ in range(2)]
+            for ex in (ex_t, ex_i):
+                ex.register(gids)
+                ex.push(gids, vals)
+            for a, b in zip(ex_t.peek(gids), ex_i.peek(gids)):
+                np.testing.assert_array_equal(a, b)
+        tcp.close()
+    finally:
+        for h in handles:
+            h.stop()
