@@ -34,14 +34,40 @@ the weight-wire sweep, bytes-per-round on the weight plane.
 
 from __future__ import annotations
 
+import json
+import pathlib
+
 import numpy as np
 
 from repro.fedsvc.coordinator import serve_in_thread
 from repro.fedsvc.runtime import RunConfig, make_coordinator_state
 from repro.fedsvc.worker import FedWorker, WorkerScenario, run_in_thread
 from repro.launch.embed_server import serve_in_thread as embed_serve
+from repro.obsv.metrics import REGISTRY, MetricsRegistry
 
 from .common import emit, quick_mode
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _phase_breakdown(delta: dict) -> dict:
+    """Registry-snapshot delta → mean seconds per phase for this run.
+    The same histograms an OP_METRICS scrape reads — the observability
+    registry IS the bench's bookkeeping (no parallel ledger)."""
+    out = {}
+    for name in ("worker.round_s", "worker.barrier_s", "coord.agg_s",
+                 "exchange.latency_s.gather", "exchange.latency_s.write",
+                 "exchange.latency_s.vgather"):
+        h = delta.get(name)
+        if isinstance(h, dict) and h.get("count"):
+            out[name] = {"count": h["count"],
+                         "mean_s": h["sum"] / h["count"]}
+    for name, v in delta.items():
+        if name in ("coord.aggregations", "coord.weight_bytes",
+                    "worker.rounds", "embed.requests") \
+                and isinstance(v, (int, float)):
+            out[name] = v
+    return out
 
 STRAGGLE = 2.5          # the slow worker's pacing multiplier (>= 2x)
 
@@ -49,6 +75,7 @@ STRAGGLE = 2.5          # the slow worker's pacing multiplier (>= 2x)
 def run_deployment(*, rounds: int, cfg_kw: dict, overrides: dict,
                    scenarios: dict[int, WorkerScenario] | None = None
                    ) -> dict:
+    reg_before = REGISTRY.snapshot()
     shards = [embed_serve(cfg_kw["num_layers"], cfg_kw["hidden"])
               for _ in range(2)]
     cfg = RunConfig(strategy="E", num_clients=2, rounds=rounds,
@@ -78,7 +105,9 @@ def run_deployment(*, rounds: int, cfg_kw: dict, overrides: dict,
             "wall": [h["wall_s"] for h in history],
             "modelled": [h["cum_modelled_s"] for h in history],
             "weight_bytes": [h["weight_bytes"] for h in history],
-            "weight_modelled": [h["weight_modelled_s"] for h in history]}
+            "weight_modelled": [h["weight_modelled_s"] for h in history],
+            "phases": _phase_breakdown(
+                MetricsRegistry.delta(REGISTRY.snapshot(), reg_before))}
 
 
 def tta(res: dict, target: float, key: str) -> float:
@@ -151,6 +180,35 @@ def main() -> None:
     print(f"# weight wire int8+EF: {raw_b / cmp_b:.2f}x fewer bytes/round "
           f"({raw_b / 1e3:.1f} -> {cmp_b / 1e3:.1f} kB), "
           f"peak acc delta {dpp:+.2f} pp vs fp32 raw", flush=True)
+
+    # -- BENCH_rounds.json: durable perf trajectory (ROADMAP item) --------
+    # round time, per-phase breakdown (from the metrics registry — the
+    # exact histograms OP_METRICS scrapes read), and time-to-accuracy
+    # per deployment flavour.
+    record = {"bench": "control_plane", "rounds": rounds,
+              "quick": quick_mode(), "graph": cfg_kw["graph"],
+              "scale": cfg_kw["scale"], "runs": {}}
+    for name, res in (("sync_straggler", sync), ("async_straggler", asyn),
+                      ("sync_weight_int8", comp)):
+        gaps = np.diff([0.0] + res["wall"])
+        record["runs"][name] = {
+            "median_round_s": float(np.median(gaps)),
+            "wall_s": res["wall"][-1],
+            "modelled_s": res["modelled"][-1],
+            "tta_measured_s": tta(res, target, "wall"),
+            "tta_modelled_s": tta(res, target, "modelled"),
+            "peak_acc": float(max(res["accs"])),
+            "final_acc": float(res["accs"][-1]),
+            "max_barrier_s": float(max(
+                (h.get("max_barrier_s", 0.0) for h in res["history"]),
+                default=0.0)),
+            "weight_kB_round": float(np.mean(
+                res["weight_bytes"][1:] or res["weight_bytes"])) / 1e3,
+            "phases": res["phases"],
+        }
+    out_path = REPO_ROOT / "BENCH_rounds.json"
+    out_path.write_text(json.dumps(record, indent=2, default=float) + "\n")
+    print(f"# wrote {out_path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -43,6 +43,7 @@ from repro.graphs.partition import (ClientShard, bfs_partition,
                                     make_client_shards)
 from repro.graphs.sampler import NeighborSampler
 from repro.models import gnn
+from repro.obsv.trace import TRACE
 from repro.optim import Optimizer, adam
 
 from .cost_model import NetworkModel
@@ -455,14 +456,16 @@ class FederatedGNNTrainer:
         sh = self.shards[ci]
         if self.exchange is None or len(sh.pull_nodes) == 0:
             return
-        vals = self.ex_clients[ci].peek(sh.pull_nodes)
-        pad = max(1, sh.num_remote) - sh.num_remote
-        self._caches[ci] = [
-            jnp.asarray(np.concatenate([
-                vals[l], np.zeros((pad, self.hidden), np.float32)]))
-            if sh.num_remote else self._caches[ci][l]
-            for l in range(self.L - 1)
-        ]
+        with TRACE.span("client.pull", args={"client": ci,
+                                             "rows": len(sh.pull_nodes)}):
+            vals = self.ex_clients[ci].peek(sh.pull_nodes)
+            pad = max(1, sh.num_remote) - sh.num_remote
+            self._caches[ci] = [
+                jnp.asarray(np.concatenate([
+                    vals[l], np.zeros((pad, self.hidden), np.float32)]))
+                if sh.num_remote else self._caches[ci][l]
+                for l in range(self.L - 1)
+            ]
 
     def _pull_time(self, ci: int, minibatches) -> tuple[float, float, list[int]]:
         """(upfront pull s, dynamic pull s, nodes-per-dynamic-RPC sizes)."""
@@ -502,14 +505,15 @@ class FederatedGNNTrainer:
         sh = self.shards[ci]
         if self.exchange is None or len(sh.push_nodes) == 0:
             return None, 0.0, 0.0
-        t0 = time.perf_counter()
-        outs = gnn.full_propagate(params, self.shard_arrays[ci],
-                                  self._caches[ci], conv=self.conv)
-        jax.block_until_ready(outs)
-        t_compute = time.perf_counter() - t0
-        rows = self.push_rows[ci]
-        vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
-        plan = self.ex_clients[ci].plan_push(sh.push_nodes, vals)
+        with TRACE.span("client.push_compute", args={"client": ci}):
+            t0 = time.perf_counter()
+            outs = gnn.full_propagate(params, self.shard_arrays[ci],
+                                      self._caches[ci], conv=self.conv)
+            jax.block_until_ready(outs)
+            t_compute = time.perf_counter() - t0
+            rows = self.push_rows[ci]
+            vals = [np.asarray(outs[l])[rows] for l in range(self.L - 1)]
+            plan = self.ex_clients[ci].plan_push(sh.push_nodes, vals)
         return plan, t_compute, plan.transfer_time
 
     # -- lifecycle ---------------------------------------------------------------
@@ -612,12 +616,14 @@ class FederatedGNNTrainer:
         loss = jnp.zeros(())
         for e, batches in enumerate(epochs_batches, start=1):
             t0 = time.perf_counter()
-            for mb in batches:
-                batch = gnn.blocks_to_arrays(mb)
-                params, opt_state, loss = self._train_step(
-                    params, opt_state, batch, self.feats[ci],
-                    self._caches[ci], self.labels[ci])
-            jax.block_until_ready(loss)
+            with TRACE.span("client.train_epoch",
+                            args={"client": ci, "epoch": e}):
+                for mb in batches:
+                    batch = gnn.blocks_to_arrays(mb)
+                    params, opt_state, loss = self._train_step(
+                        params, opt_state, batch, self.feats[ci],
+                        self._caches[ci], self.labels[ci])
+                jax.block_until_ready(loss)
             t_train += time.perf_counter() - t0
             if st.overlap_push and e == self.epochs - 1:
                 # §4.2: stale push computed from the epoch-(ε−1) model
@@ -640,6 +646,7 @@ class FederatedGNNTrainer:
         assert self.only_clients is None, \
             "run_round needs every client; shard-local trainers drive " \
             "client_round through the fedsvc control plane"
+        TRACE.set_context(round=round_idx)
         self.set_round_tau(round_idx)
         # pull-frequency shard rebalancing (ROADMAP): after the first
         # round's pulls are logged, re-place hot rows across the
@@ -672,11 +679,12 @@ class FederatedGNNTrainer:
         # multi-process sync path aggregates with the same float32
         # arithmetic in the same client order.
         t0 = time.perf_counter()
-        weights = [res.weight for res in results]
-        agg = fedavg_leaves([self.params_leaves(res.params)
-                             for res in results], weights)
-        self.params = self.leaves_to_params(agg)
-        acc = self.evaluate()
+        with TRACE.span("round.aggregate", args={"round": round_idx}):
+            weights = [res.weight for res in results]
+            agg = fedavg_leaves([self.params_leaves(res.params)
+                                 for res in results], weights)
+            self.params = self.leaves_to_params(agg)
+            acc = self.evaluate()
         t_agg = time.perf_counter() - t0 \
             + 2 * self.net.model_transfer_time(self._num_params())
         phases.agg = t_agg

@@ -33,7 +33,6 @@ timing — see :class:`RpcSample`.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import socket
 import time
@@ -41,6 +40,7 @@ import time
 import numpy as np
 
 from repro.core.cost_model import NetworkModel, TransferLog
+from repro.obsv.metrics import SampleWindow
 
 from . import wire
 from .codec import WireCodec, get_codec
@@ -106,8 +106,13 @@ class TcpTransport(HashShardedWire, Transport):
         self._socks: list[socket.socket | None] = [None] * self.num_shards
         self._logs = [TransferLog() for _ in range(self.num_shards)]
         self._wire_logs = [TransferLog() for _ in range(self.num_shards)]
-        self.rpc_samples: collections.deque[RpcSample] = \
-            collections.deque(maxlen=MAX_RPC_SAMPLES)
+        # per-transport sample window whose observe() also lands each
+        # sample's latency/bytes in the process-global per-op metrics
+        # histograms (exchange.latency_s.<op> / exchange.bytes.<op>):
+        # fit_network_model calibration iterates the window, OP_METRICS
+        # scrapes read the histograms — one bookkeeping point for both
+        self.rpc_samples: SampleWindow = SampleWindow(
+            "exchange", MAX_RPC_SAMPLES)
         self._validate_servers()
 
     def _validate_servers(self) -> None:
@@ -242,7 +247,7 @@ class TcpTransport(HashShardedWire, Transport):
         self._wire_logs[s].add(bytes=payload_bytes, rpcs=1,
                                embeddings=n * layers, seconds=modelled,
                                measured_seconds=measured_s)
-        self.rpc_samples.append(RpcSample(
+        self.rpc_samples.observe(RpcSample(
             op=op, shard=s, fanout=fanout, n_rows=n, layers=layers,
             payload_bytes=payload_bytes, frame_bytes=frame_bytes,
             measured_s=measured_s, modelled_s=modelled))

@@ -41,6 +41,14 @@ OP_STATS = 4
 OP_SHUTDOWN = 5
 OP_VGATHER = 6       # conditional gather: versions always, rows if stale
 
+# Shared telemetry opcodes, answered by EVERY TCP plane (embed shards
+# own opcodes 1..15, the fedsvc control plane 16..31, gnnserve 32+;
+# 14/15 are carved out of the embedding range and reserved across all
+# planes so one scraper speaks to any endpoint).  Handled by
+# repro.obsv.teleserve.handle_telemetry before plane-specific dispatch.
+OP_METRICS = 14      # → JSON metrics-registry snapshot + clock handshake
+OP_TRACE = 15        # → JSON trace-ring snapshot + clock handshake
+
 STATUS_OK = 0
 STATUS_ERR = 1
 

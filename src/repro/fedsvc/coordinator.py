@@ -67,10 +67,18 @@ import numpy as np
 from repro.core.cost_model import NetworkModel
 from repro.exchange import wire
 from repro.exchange.codec import decode_leaves, encode_leaves
+from repro.obsv import teleserve
+from repro.obsv.metrics import REGISTRY
+from repro.obsv.trace import TRACE
 
 from . import protocol
 from .aggregation import (apply_buffered_deltas, fedavg_leaves, leaf_add,
                           staleness_scale)
+
+_AGGS = REGISTRY.counter("coord.aggregations")
+_AGG_S = REGISTRY.histogram("coord.agg_s")
+_BARRIER_S = REGISTRY.histogram("coord.barrier_wait_s")
+_WEIGHT_BYTES = REGISTRY.counter("coord.weight_bytes")
 
 
 class CoordinatorState:
@@ -203,6 +211,7 @@ class CoordinatorState:
             self._ul_bytes += nbytes
             self._ul_max = max(self._ul_max, nbytes)
         self.weight_bytes_cum += nbytes
+        _WEIGHT_BYTES.inc(nbytes)
 
     def _weight_ledger(self) -> dict:
         """Close out this aggregation's weight-wire ledger: actual bytes
@@ -237,10 +246,16 @@ class CoordinatorState:
             return
         ups = [self.updates[cid] for cid in sorted(eligible)]
         t0 = time.perf_counter()
-        self.leaves = fedavg_leaves([u["leaves"] for u in ups],
-                                    [u["weight"] for u in ups])
-        acc = self.eval_fn(self.leaves) if self.eval_fn else float("nan")
+        with TRACE.span("coord.aggregate",
+                        args={"round": self.round, "mode": "sync",
+                              "clients": len(ups)}):
+            self.leaves = fedavg_leaves([u["leaves"] for u in ups],
+                                        [u["weight"] for u in ups])
+            acc = self.eval_fn(self.leaves) if self.eval_fn \
+                else float("nan")
         ledger = self._weight_ledger()
+        _AGGS.inc()
+        _AGG_S.observe(time.perf_counter() - t0)
         agg_s = time.perf_counter() - t0 + ledger["weight_modelled_s"]
         round_modelled = max(u["modelled_s"] for u in ups) + agg_s
         self.cum_modelled_s += round_modelled
@@ -279,14 +294,19 @@ class CoordinatorState:
             self.cond.release()
             try:
                 t0 = time.perf_counter()
-                scaled = [(u["weight"],
-                           staleness_scale(version - u["version"],
-                                           self.staleness_decay),
-                           u["leaves"]) for u in ups]
-                leaves = apply_buffered_deltas(base, scaled)
-                acc = self.eval_fn(leaves) if self.eval_fn \
-                    else float("nan")
+                with TRACE.span("coord.aggregate",
+                                args={"version": version, "mode": "async",
+                                      "buffered": len(ups)}):
+                    scaled = [(u["weight"],
+                               staleness_scale(version - u["version"],
+                                               self.staleness_decay),
+                               u["leaves"]) for u in ups]
+                    leaves = apply_buffered_deltas(base, scaled)
+                    acc = self.eval_fn(leaves) if self.eval_fn \
+                        else float("nan")
                 compute_s = time.perf_counter() - t0
+                _AGGS.inc()
+                _AGG_S.observe(compute_s)
             finally:
                 self.cond.acquire()
                 self._aggregating = False
@@ -367,6 +387,12 @@ class CoordinatorState:
     def handle(self, conn_id: int, body: bytes) -> bytes:
         """One request body → one response body (never raises; blocking
         ops wait on the condition inside)."""
+        # shared telemetry opcodes first: their bodies don't follow the
+        # fedsvc `op | header_len | JSON` layout, so they must not reach
+        # protocol.parse_body
+        telemetry = teleserve.handle_telemetry(body)
+        if telemetry is not None:
+            return telemetry
         try:
             op, header, tensors = protocol.parse_body(body)
         except Exception as e:
@@ -512,12 +538,14 @@ class CoordinatorState:
 
     def _op_wait_pulled(self, header: dict) -> bytes:
         rnd = int(header["round"])
-        with self.cond:
+        t0 = time.perf_counter()
+        with self.cond, TRACE.span("coord.barrier", args={"round": rnd}):
             # barrier: every *surviving sampled* client pulled, or the
             # round already moved on (a late waiter must not deadlock)
             self._wait(lambda: self.round != rnd
                        or (self._sampled(rnd)
                            & self.active_clients) <= self.pulled)
+            _BARRIER_S.observe(time.perf_counter() - t0)
             return protocol.build_ok()
 
     def _op_update(self, conn_id: int, header: dict, tensors) -> bytes:

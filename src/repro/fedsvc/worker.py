@@ -61,6 +61,12 @@ import numpy as np
 from repro.core import FederatedGNNTrainer
 from repro.exchange.codec import decode_leaves, encode_leaves
 from repro.exchange.delta import LeafErrorFeedback
+from repro.obsv.metrics import REGISTRY
+from repro.obsv.trace import TRACE
+
+_BARRIER_S = REGISTRY.histogram("worker.barrier_s")
+_ROUND_S = REGISTRY.histogram("worker.round_s")
+_ROUNDS = REGISTRY.counter("worker.rounds")
 
 from .aggregation import leaf_add, leaf_sub
 from .protocol import CoordinatorClient
@@ -225,10 +231,12 @@ class FedWorker:
         tr = self.trainer
         r = start_round
         while True:
-            head, leaves = self._fetch_model(client, r)
+            with TRACE.span("worker.get_model", args={"round": r}):
+                head, leaves = self._fetch_model(client, r)
             if head["done"]:
                 return
             r = int(head["round"])
+            TRACE.set_context(round=r, worker=self.worker_id)
             sampled = head.get("sampled")
             mine = self.client_ids if sampled is None else \
                 [c for c in self.client_ids if c in sampled]
@@ -241,16 +249,18 @@ class FedWorker:
             t_start = time.perf_counter()
             params = tr.leaves_to_params(leaves)
             tr.set_round_tau(r, head.get("accs", ()))
-            for ci in mine:
-                tr._fill_cache(ci)
-            if self.scenario.pull_delay_s > 0:
-                time.sleep(self.scenario.pull_delay_s)
-            client.pulled(r, mine)
+            with TRACE.span("worker.pull", args={"clients": mine}):
+                for ci in mine:
+                    tr._fill_cache(ci)
+                if self.scenario.pull_delay_s > 0:
+                    time.sleep(self.scenario.pull_delay_s)
+                client.pulled(r, mine)
             # dropout lands after the pull barrier contribution and
             # before any update — the nastiest spot for the coordinator
             self._maybe_drop(r)
-            results = [tr.client_round(ci, params, fill_cache=False)
-                       for ci in mine]
+            with TRACE.span("worker.train", args={"clients": mine}):
+                results = [tr.client_round(ci, params, fill_cache=False)
+                           for ci in mine]
             t_train = time.perf_counter() - t_start
             delay = self.scenario.round_delay(t_train)
             if delay > 0:
@@ -260,24 +270,32 @@ class FedWorker:
             # round to every client (round_measured_s = max over
             # clients would then exceed any single worker's own work)
             t_barrier = time.perf_counter()
-            client.wait_pulled(r)
+            with TRACE.span("worker.barrier"):
+                client.wait_pulled(r)
             barrier_s = time.perf_counter() - t_barrier
-            for res in results:
-                if res.push_plan is not None:
-                    tr.ex_clients[res.client_id].apply_push(res.push_plan)
+            _BARRIER_S.observe(barrier_s)
+            with TRACE.span("worker.push"):
+                for res in results:
+                    if res.push_plan is not None:
+                        tr.ex_clients[res.client_id].apply_push(
+                            res.push_plan)
             measured = time.perf_counter() - t_start - barrier_s
-            for res in results:
-                extra, payload = self._update_payload(
-                    res.client_id, tr.params_leaves(res.params))
-                client.update(
-                    {"round": r, "client_id": res.client_id,
-                     "weight": res.weight, "loss": res.loss,
-                     "modelled_s": res.client_time * self.scenario.pacing
-                     + self.scenario.straggler_s
-                     + self.scenario.pull_delay_s,
-                     "measured_s": measured, "barrier_s": barrier_s,
-                     **extra},
-                    payload)
+            _ROUNDS.inc()
+            _ROUND_S.observe(measured)
+            with TRACE.span("worker.update"):
+                for res in results:
+                    extra, payload = self._update_payload(
+                        res.client_id, tr.params_leaves(res.params))
+                    client.update(
+                        {"round": r, "client_id": res.client_id,
+                         "weight": res.weight, "loss": res.loss,
+                         "modelled_s": res.client_time
+                         * self.scenario.pacing
+                         + self.scenario.straggler_s
+                         + self.scenario.pull_delay_s,
+                         "measured_s": measured, "barrier_s": barrier_s,
+                         **extra},
+                        payload)
             self.records.append({
                 "round": r, "clients": mine,
                 "measured_s": measured, "barrier_s": barrier_s,
@@ -316,16 +334,22 @@ class FedWorker:
                 # its own async round, and pacing must not compound over
                 # earlier clients' train time + injected sleeps
                 t_client = time.perf_counter()
-                res = tr.client_round(ci, params)
+                TRACE.set_context(round=it, worker=self.worker_id)
+                with TRACE.span("worker.train",
+                                args={"client": ci, "version": version}):
+                    res = tr.client_round(ci, params)
                 # no barrier by design: async trades the static-server
                 # invariant for wall-clock, so the push lands at once
-                if res.push_plan is not None:
-                    tr.ex_clients[ci].apply_push(res.push_plan)
+                with TRACE.span("worker.push"):
+                    if res.push_plan is not None:
+                        tr.ex_clients[ci].apply_push(res.push_plan)
                 delay = self.scenario.round_delay(
                     time.perf_counter() - t_client)
                 if delay > 0:
                     time.sleep(delay)
                 measured = time.perf_counter() - t_client
+                _ROUNDS.inc()
+                _ROUND_S.observe(measured)
                 if self.weight_codec is None:
                     extra, payload = {}, leaf_sub(
                         tr.params_leaves(res.params), base)

@@ -21,6 +21,14 @@ import collections
 import dataclasses
 import time
 
+from repro.obsv.metrics import REGISTRY
+from repro.obsv.trace import TRACE
+
+_SERVED = REGISTRY.counter("gnnserve.served")
+_QWAIT = REGISTRY.histogram("gnnserve.queue_wait_s")
+_OCCUPANCY = REGISTRY.histogram("gnnserve.lane_occupancy",
+                                lo=1.0, hi=4096.0, factor=2.0)
+
 
 @dataclasses.dataclass
 class ServedResult:
@@ -79,11 +87,21 @@ class QueryBatcher:
         q = self._queues[depth]
         if not q:
             return []
+        # depth-lane occupancy at pick time: how full the chosen lane
+        # was, and a live per-lane depth gauge for scrapes
+        _OCCUPANCY.observe(len(q))
+        for d, lane in self._queues.items():
+            REGISTRY.gauge(f"gnnserve.lane_depth.d{d}").set(len(lane))
         take = [q.popleft() for _ in range(min(self.batch_size, len(q)))]
+        t_step = self.clock()
+        for t in take:
+            _QWAIT.observe(t_step - t[4])     # submit → batch pick
         seeds = [t[1] for t in take]
         thrs = [t[3] for t in take]
-        preds, confs, depths = self.engine.predict_at_depth(
-            seeds, thrs, depth)
+        with TRACE.span("gnnserve.forward_batch",
+                        args={"depth": depth, "n": len(take)}):
+            preds, confs, depths = self.engine.predict_at_depth(
+                seeds, thrs, depth)
         now = self.clock()
         out = []
         sched = self.engine.depth_schedule
@@ -96,6 +114,8 @@ class QueryBatcher:
                 self.served += 1
                 self.exits_by_depth[depth] = \
                     self.exits_by_depth.get(depth, 0) + 1
+                _SERVED.inc()
+                REGISTRY.counter(f"gnnserve.exits.d{depth}").inc()
                 out.append(res)
             else:                    # escalate to the next schedule depth
                 nxt = sched[sched.index(depth) + 1]

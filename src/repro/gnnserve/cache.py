@@ -21,6 +21,15 @@ import collections
 import numpy as np
 
 from repro.exchange.client import ExchangeClient
+from repro.obsv.metrics import REGISTRY
+
+# process-wide mirrors of the per-cache attribute counters: OP_METRICS
+# scrapes read these; tests that build several caches keep reading the
+# exact per-instance attributes
+_HITS = REGISTRY.counter("gnnserve.cache.hits")
+_MISSES = REGISTRY.counter("gnnserve.cache.misses")
+_STALE = REGISTRY.counter("gnnserve.cache.stale_refreshes")
+_EVICTIONS = REGISTRY.counter("gnnserve.cache.evictions")
 
 
 class HotEmbeddingCache:
@@ -92,9 +101,15 @@ class HotEmbeddingCache:
             out[i] = rows[j]
         # account + refresh under one pass: stale entries get the new
         # (version, row); every touched key moves to the LRU tail
-        self.hits += int(fresh.sum())
-        self.misses += int((have[stale] < 0).sum())
-        self.stale_refreshes += int((have[stale] >= 0).sum())
+        n_hits = int(fresh.sum())
+        n_miss = int((have[stale] < 0).sum())
+        n_stale = int((have[stale] >= 0).sum())
+        self.hits += n_hits
+        self.misses += n_miss
+        self.stale_refreshes += n_stale
+        _HITS.inc(n_hits)
+        _MISSES.inc(n_miss)
+        _STALE.inc(n_stale)
         for j, i in enumerate(stale):
             self._rows[keys[i]] = [int(ver[i]), rows[j].copy()]
         for k in keys:
@@ -102,4 +117,5 @@ class HotEmbeddingCache:
         while len(self._rows) > self.capacity_rows:
             self._rows.popitem(last=False)
             self.evictions += 1
+            _EVICTIONS.inc()
         return out, ver

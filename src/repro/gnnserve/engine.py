@@ -38,6 +38,9 @@ import numpy as np
 
 from repro.graphs.sampler import Block, _pad_to, _round_up
 from repro.models import gnn
+from repro.obsv.metrics import REGISTRY
+
+_FORWARDS = REGISTRY.counter("gnnserve.forwards")
 
 from .cache import HotEmbeddingCache
 
@@ -248,6 +251,7 @@ class ShardServeEngine:
             self._refresh_slots(l, slots)
         batch = self._batch_arrays(plan)
         self.forwards += 1
+        _FORWARDS.inc()
         if d == L:
             caches = list(self._ctbl)
             logits = _logits_full(self.params, batch, self.features,
@@ -392,6 +396,7 @@ class ServingPlane:
                                for k, v in sorted(per_depth.items())},
             "forwards": sum(e.forwards for e in self.engines.values()),
             "cache": self.cache.stats(),
+            "cache_hit_rate": self.cache.hit_rate,
         }
 
 

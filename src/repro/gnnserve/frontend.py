@@ -18,8 +18,14 @@ import threading
 
 import numpy as np
 
+from repro.obsv import teleserve
+from repro.obsv.metrics import REGISTRY
+from repro.obsv.trace import TRACE
+
 from . import wire
 from .engine import ServingPlane
+
+_PREDICTS = REGISTRY.counter("gnnserve.predict_rpcs")
 
 
 class _FrontState:
@@ -49,17 +55,27 @@ class _FrontState:
     # -- per-connection dispatch ---------------------------------------------
 
     def handle(self, body: bytes) -> bytes:
+        telemetry = teleserve.handle_telemetry(body)
+        if telemetry is not None:
+            return telemetry
         try:
             op, req = wire.parse_serve_request(body)
         except Exception as e:
             return wire.build_err(f"bad request: {type(e).__name__}: {e}")
         try:
             if op == wire.OP_PREDICT:
-                return self._handle_predict(req)
+                _PREDICTS.inc()
+                with TRACE.span("gnnserve.predict",
+                                args={"n": len(req["vids"])}):
+                    return self._handle_predict(req)
             if op == wire.OP_SSTATS:
+                # registry-backed stats: the plane's own counts plus the
+                # gnnserve.* slice of the process metrics registry — one
+                # source feeds both the SSTATS dict and OP_METRICS
                 with self.lock:
-                    return wire.build_ok(
-                        wire.build_stats_payload(self.plane.stats()))
+                    stats = self.plane.stats()
+                    stats["metrics"] = REGISTRY.snapshot("gnnserve.")
+                    return wire.build_ok(wire.build_stats_payload(stats))
             if op == wire.OP_SHUTDOWN:
                 self.stop.set()
                 with self.cond:

@@ -215,3 +215,17 @@ def dequantize_int8(values: jax.Array, scales: jax.Array, *,
     sp, _, _ = pad_rows(scales.astype(jnp.float32), width=1)
     out = dequantize_padded(vp, sp, interpret=interpret)
     return out[:n, :h]
+
+
+# -- kernel-compile telemetry -------------------------------------------------
+# jax.jit re-traces per distinct bucket shape; the bucketed-padding
+# contract (tests/test_kernels.py) bounds these at O(log rows) per
+# kernel.  Exposed as fn-backed gauges so an OP_METRICS scrape shows
+# live compile-cache sizes without importing jax internals anywhere
+# else.
+from repro.obsv.metrics import REGISTRY as _REGISTRY  # noqa: E402
+
+_REGISTRY.gauge("kernels.quantize_padded.compiles",
+                fn=quantize_padded._cache_size)
+_REGISTRY.gauge("kernels.dequantize_padded.compiles",
+                fn=dequantize_padded._cache_size)

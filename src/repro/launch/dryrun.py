@@ -92,7 +92,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
     n_dev = mesh.size
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
            "devices": n_dev, "ok": False}
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         bundle = build_step(cfg, shape, mesh, microbatches=microbatches,
                             seq_parallel=seq_parallel,
@@ -107,7 +107,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
         cen = census(hlo_text)
         rec.update({
             "ok": True,
-            "lower_compile_s": round(time.time() - t0, 1),
+            "lower_compile_s": round(time.perf_counter() - t0, 1),
             "memory": {k: int(getattr(mem, k))
                        for k in ("argument_size_in_bytes",
                                  "output_size_in_bytes",
@@ -132,7 +132,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
     except Exception as e:  # noqa: BLE001 — recorded, sweep continues
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc(limit=6)
-        rec["lower_compile_s"] = round(time.time() - t0, 1)
+        rec["lower_compile_s"] = round(time.perf_counter() - t0, 1)
     return rec
 
 

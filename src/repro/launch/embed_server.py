@@ -39,6 +39,14 @@ import numpy as np
 from repro.core.embedding_server import EmbeddingServer
 from repro.exchange import wire
 from repro.exchange.codec import get_codec
+from repro.obsv import teleserve
+from repro.obsv.metrics import REGISTRY
+from repro.obsv.trace import TRACE
+
+_REQS = REGISTRY.counter("embed.requests")
+_OP_SPAN = {wire.OP_REGISTER: "embed.register", wire.OP_WRITE: "embed.write",
+            wire.OP_GATHER: "embed.gather", wire.OP_VGATHER: "embed.vgather",
+            wire.OP_STATS: "embed.stats"}
 
 
 class _ServerState:
@@ -53,10 +61,18 @@ class _ServerState:
 
     def handle(self, body: bytes) -> bytes:
         """One request body → one response body (never raises)."""
+        telemetry = teleserve.handle_telemetry(body)
+        if telemetry is not None:
+            return telemetry
         try:
             op, req = wire.parse_request(body)
         except Exception as e:                              # malformed frame
             return wire.build_err(f"bad request: {type(e).__name__}: {e}")
+        _REQS.inc()
+        with TRACE.span(_OP_SPAN.get(op, "embed.op")):
+            return self._dispatch(op, req)
+
+    def _dispatch(self, op: int, req: dict) -> bytes:
         try:
             if op == wire.OP_REGISTER:
                 with self.lock:
@@ -233,6 +249,7 @@ def serve(num_layers: int, hidden: int, *, host: str = "127.0.0.1",
     """Blocking single-shard server (the CLI entrypoint)."""
     handle = serve_in_thread(num_layers, hidden, host=host, port=port,
                              device_tables=device_tables)
+    TRACE.set_process(f"embed_server:{handle.port}")
     print(f"embed_server listening on {handle.host}:{handle.port} "
           f"(L={num_layers}, hidden={hidden}"
           f"{', device tables' if device_tables else ''})", flush=True)

@@ -31,6 +31,7 @@ import time
 
 from repro.fedsvc.coordinator import serve_in_thread
 from repro.fedsvc.runtime import RunConfig, make_coordinator_state
+from repro.obsv.trace import TRACE
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -53,6 +54,7 @@ def main(argv: list[str] | None = None) -> None:
     strategy = cfg.build_strategy()
     state = make_coordinator_state(cfg)
     handle = serve_in_thread(state, host=args.host, port=args.port)
+    TRACE.set_process(f"fed_coordinator:{handle.port}")
     print(f"fed_coordinator listening on {handle.host}:{handle.port} "
           f"(mode={strategy.aggregation}, clients={cfg.num_clients}, "
           f"rounds={cfg.rounds}, weight_codec={strategy.weight_codec}, "

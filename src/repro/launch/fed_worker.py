@@ -33,6 +33,8 @@ import json
 
 from repro.fedsvc.runtime import RunConfig
 from repro.fedsvc.worker import FedWorker, WorkerScenario
+from repro.obsv import teleserve
+from repro.obsv.trace import TRACE
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -52,6 +54,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="reconnect + re-hello after a drop instead of "
                          "staying dead")
     ap.add_argument("--rejoin-delay-s", type=float, default=0.5)
+    ap.add_argument("--obs-port", type=int, default=None,
+                    help="run a telemetry-only listener on this port "
+                         "(OP_METRICS/OP_TRACE) so obs_dump can scrape "
+                         "this worker — workers are otherwise pure "
+                         "clients with no port of their own")
     RunConfig.add_args(ap)
     args = ap.parse_args(argv)
 
@@ -66,9 +73,19 @@ def main(argv: list[str] | None = None) -> None:
                               rejoin_delay_s=args.rejoin_delay_s)
     worker = FedWorker(cfg, client_ids, args.coordinator,
                        worker_id=args.worker_id, scenario=scenario)
+    TRACE.set_process(f"fed_worker:{worker.worker_id}")
+    obs = None
+    if args.obs_port is not None:
+        obs = teleserve.serve_telemetry(port=args.obs_port)
+        print(f"fed_worker telemetry on {obs.host}:{obs.port}",
+              flush=True)
     print(f"fed_worker {worker.worker_id} clients={client_ids} "
           f"coordinator={args.coordinator}", flush=True)
-    records = worker.run()
+    try:
+        records = worker.run()
+    finally:
+        if obs is not None:
+            obs.stop()
     for rec in records:
         print(json.dumps(rec), flush=True)
     status = "DROPPED" if worker.dropped else \

@@ -24,6 +24,7 @@ import time
 from repro.fedsvc.runtime import RunConfig
 from repro.gnnserve import build_serving
 from repro.gnnserve.frontend import serve_in_thread
+from repro.obsv.trace import TRACE
 
 
 def build_plane_from_cfg(cfg: RunConfig, *, cache_rows: int,
@@ -74,6 +75,7 @@ def main(argv: list[str] | None = None) -> None:
           flush=True)
 
     handle = serve_in_thread(plane, host=args.host, port=args.port)
+    TRACE.set_process(f"gnn_serve:{handle.port}")
     print(f"gnn_serve listening on {handle.host}:{handle.port} "
           f"shards={sorted(plane.engines)} "
           f"schedule={next(iter(plane.engines.values())).depth_schedule}",

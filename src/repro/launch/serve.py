@@ -45,7 +45,7 @@ def main():
         cfg, batch=args.batch, prompt_len=args.prompt, seed=0))
     toks = jnp.asarray(prompts[:, :1], jnp.int32)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     generated = []
     for step in range(args.prompt + args.generate - 1):
         logits, cache = dec(params, toks, cache)
@@ -55,7 +55,7 @@ def main():
             toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             generated.append(np.asarray(toks)[:, 0])
     jax.block_until_ready(logits)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     n_tok = args.batch * (args.prompt + args.generate - 1)
     print(f"arch={cfg.name} served {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s on CPU)")

@@ -52,7 +52,7 @@ def main():
     step = jax.jit(lm.make_train_step(cfg, opt))
 
     gen = synthetic_batches(cfg, batch=args.batch, seq=args.seq, seed=0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(args.steps):
         batch = next(gen)
         params, opt_state, metrics = step(params, opt_state, batch)
@@ -60,7 +60,7 @@ def main():
             jax.block_until_ready(metrics["loss"])
             print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
                   f"aux {float(metrics['aux']):.4f}  "
-                  f"{(time.time() - t0):.1f}s")
+                  f"{(time.perf_counter() - t0):.1f}s")
     print("done")
 
 

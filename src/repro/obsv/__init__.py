@@ -1,0 +1,22 @@
+"""Observability plane: trace spans, metrics registry, wire telemetry.
+
+Three small modules, one discipline:
+
+  :mod:`~repro.obsv.trace`     — low-overhead span recorder (Chrome
+      trace-event export; Perfetto renders a whole federated round as
+      one timeline).
+  :mod:`~repro.obsv.metrics`   — named registry of counters, gauges
+      and log-bucketed histograms with snapshot/delta semantics.
+  :mod:`~repro.obsv.teleserve` — the shared ``OP_METRICS``/``OP_TRACE``
+      wire opcodes every TCP plane (embed shards, fedsvc coordinator,
+      gnnserve frontend) answers, plus the scrape client and the
+      cross-process trace merge used by ``launch/obs_dump.py``.
+
+Everything is in-process and dependency-free: instrumented code calls
+module-level singletons (:data:`repro.obsv.trace.TRACE`,
+:data:`repro.obsv.metrics.REGISTRY`); disabled tracing is a
+zero-allocation no-op, and metrics are always on (a counter bump is a
+dict-free attribute add).
+"""
+
+from . import metrics, trace  # noqa: F401
