@@ -27,13 +27,13 @@ def serve(arch, batch=4, prompt=16, generate=16):
                                             prompt_len=prompt, seed=0))
     toks = jnp.asarray(prompts[:, :1], jnp.int32)
     logits = None
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(prompt + generate - 1):
         logits, cache = dec(params, toks, cache)
         toks = jnp.asarray(prompts[:, step + 1: step + 2], jnp.int32) \
             if step < prompt - 1 else jnp.argmax(logits, -1).astype(jnp.int32)
     jax.block_until_ready(logits)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     n = batch * (prompt + generate - 1)
     print(f"  {arch:24s} ({cfg.family:6s}) {n / dt:7.1f} tok/s")
 

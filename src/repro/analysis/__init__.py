@@ -1,0 +1,12 @@
+"""repro-lint: stdlib-ast static analysis for this repo's invariants.
+
+Entry points: :func:`run_analysis` (library) and
+``python -m repro.launch.lint`` (CLI).  See ``core.py`` for the rule
+family overview and the suppression-comment syntax.
+"""
+
+from .core import (AnalysisResult, Finding, SourceFile, collect_files,
+                   load_file, run_analysis)
+
+__all__ = ["AnalysisResult", "Finding", "SourceFile", "collect_files",
+           "load_file", "run_analysis"]

@@ -24,6 +24,12 @@ reports them separately as ``frame_bytes``.
 Both the client (:class:`repro.exchange.socket_transport.TcpTransport`)
 and the server (``repro.launch.embed_server``) build and parse frames
 through this module, so the two ends cannot drift.
+
+Opcodes 1–15 belong to this plane (14/15 reserved for telemetry
+scrapes); repro-lint (``python -m repro.launch.lint``, family WP)
+cross-checks every builder/parser byte layout and the pinned opcode
+registry in :mod:`repro.analysis.rules_wire` — renumbering an opcode
+here requires the matching registry edit.
 """
 
 from __future__ import annotations
@@ -37,8 +43,8 @@ import numpy as np
 OP_REGISTER = 1
 OP_WRITE = 2
 OP_GATHER = 3
-OP_STATS = 4
-OP_SHUTDOWN = 5
+OP_EMBED_STATS = 4
+OP_EMBED_SHUTDOWN = 5
 OP_VGATHER = 6       # conditional gather: versions always, rows if stale
 
 # Shared telemetry opcodes, answered by EVERY TCP plane (embed shards
@@ -246,11 +252,11 @@ def build_vgather(codec: str, global_ids: np.ndarray,
 
 
 def build_stats() -> bytes:
-    return _U8.pack(OP_STATS)
+    return _U8.pack(OP_EMBED_STATS)
 
 
 def build_shutdown() -> bytes:
-    return _U8.pack(OP_SHUTDOWN)
+    return _U8.pack(OP_EMBED_SHUTDOWN)
 
 
 # -- request parsing (server side) --------------------------------------------
@@ -299,7 +305,7 @@ def parse_request(body: bytes) -> tuple[int, dict]:
         have = np.frombuffer(view, np.int64, n, offset=off)
         return op, {"codec": CODEC_NAMES[codec_id], "layers": layers,
                     "global_ids": gids, "have_versions": have}
-    if op in (OP_STATS, OP_SHUTDOWN):
+    if op in (OP_EMBED_STATS, OP_EMBED_SHUTDOWN):
         return op, {}
     raise ValueError(f"unknown opcode {op}")
 

@@ -110,46 +110,47 @@ class CoordinatorState:
 
         self.cond = threading.Condition()
         self.stop = threading.Event()
-        self.leaves: Optional[list[np.ndarray]] = \
-            None if init_leaves is None else [np.asarray(l)
-                                              for l in init_leaves]
-        self.round = 0                        # sync round index
-        self.version = 0                      # async aggregation count
-        self.serial = 0                       # bumps on every aggregation
-        self.workers: dict[str, set[int]] = {}          # worker -> clients
-        self._conn_worker: dict[int, str] = {}          # conn id -> worker
-        self._worker_conn: dict[str, int] = {}          # worker -> live conn
-        self.pulled: set[int] = set()                   # this round
-        self.updates: dict[int, dict] = {}              # cid -> record
-        self.buffer: list[dict] = []                    # async pending
-        self.history: list[dict] = []                   # per aggregation
-        self.acc_history: list[float] = []
-        self.cum_modelled_s = 0.0
-        self._t0: Optional[float] = None      # first model served
-        self._assembled = False               # all K clients registered
-        self._aggregating = False             # async drain in flight
+        # every mutable field below is shared across connection threads
+        self.leaves: Optional[list[np.ndarray]] = (     # guarded-by: self.cond
+            None if init_leaves is None
+            else [np.asarray(l) for l in init_leaves])
+        self.round = 0                # sync round index; guarded-by: self.cond
+        self.version = 0              # async agg count; guarded-by: self.cond
+        self.serial = 0               # bumps per agg; guarded-by: self.cond
+        self.workers: dict[str, set[int]] = {}    # worker -> clients; guarded-by: self.cond
+        self._conn_worker: dict[int, str] = {}    # conn id -> worker; guarded-by: self.cond
+        self._worker_conn: dict[str, int] = {}    # worker -> live conn; guarded-by: self.cond
+        self.pulled: set[int] = set()             # this round; guarded-by: self.cond
+        self.updates: dict[int, dict] = {}        # cid -> record; guarded-by: self.cond
+        self.buffer: list[dict] = []              # async pending; guarded-by: self.cond
+        self.history: list[dict] = []             # per aggregation; guarded-by: self.cond
+        self.acc_history: list[float] = []        # guarded-by: self.cond
+        self.cum_modelled_s = 0.0                 # guarded-by: self.cond
+        self._t0: Optional[float] = None  # first model served; guarded-by: self.cond
+        self._assembled = False   # all K registered; guarded-by: self.cond
+        self._aggregating = False  # async drain in flight; guarded-by: self.cond
         # weight codec: per-worker (serial, leaves) of the view that
         # worker holds — version diffs are computed/reconstructed
         # against it, and it tracks the worker's copy bit-identically
-        self._served: dict[str, tuple[int, list[np.ndarray]]] = {}
-        self._samples: dict[int, set[int]] = {}         # round -> sampled
+        self._served: dict[str, tuple[int, list[np.ndarray]]] = {}  # guarded-by: self.cond
+        self._samples: dict[int, set[int]] = {}         # guarded-by: self.cond
         # weight-plane wire ledger (payload bytes of get_model responses
         # and update requests), per aggregation and cumulative
-        self.weight_bytes_cum = 0
-        self._dl_bytes = self._ul_bytes = 0             # this aggregation
-        self._dl_max = self._ul_max = 0                 # largest message
+        self.weight_bytes_cum = 0                       # guarded-by: self.cond
+        self._dl_bytes = self._ul_bytes = 0             # guarded-by: self.cond
+        self._dl_max = self._ul_max = 0                 # guarded-by: self.cond
 
     # -- helpers (call with self.cond held) --------------------------------
 
     @property
-    def active_clients(self) -> set[int]:
+    def active_clients(self) -> set[int]:  # guarded-by: self.cond
         out: set[int] = set()
         for cids in self.workers.values():
             out |= cids
         return out
 
     @property
-    def assembled(self) -> bool:
+    def assembled(self) -> bool:  # guarded-by: self.cond
         """Latches True once every client id registered.  get_model
         gates on this so no worker starts round 0 before all workers
         finished their pretrain pushes (a later dropout must not
@@ -160,23 +161,23 @@ class CoordinatorState:
         return self._assembled
 
     @property
-    def done(self) -> bool:
+    def done(self) -> bool:  # guarded-by: self.cond
         count = self.round if self.mode == "sync" else self.version
         return count >= self.num_rounds
 
-    def _num_params(self) -> int:
+    def _num_params(self) -> int:  # guarded-by: self.cond
         return sum(int(np.prod(l.shape)) for l in self.leaves or [])
 
-    def _wall(self) -> float:
+    def _wall(self) -> float:  # guarded-by: self.cond
         return 0.0 if self._t0 is None else time.perf_counter() - self._t0
 
-    def _wait(self, predicate) -> None:
+    def _wait(self, predicate) -> None:  # guarded-by: self.cond
         while not predicate() and not self.stop.is_set():
             self.cond.wait(timeout=0.2)
         if self.stop.is_set() and not predicate():
             raise ConnectionError("coordinator stopping")
 
-    def _sampled(self, idx: int) -> set[int]:
+    def _sampled(self, idx: int) -> set[int]:  # guarded-by: self.cond
         """The client set aggregation step ``idx`` runs over — the round
         index in sync mode, the model version in async (call with cond
         held).  Drawn lazily from the clients active at draw time —
@@ -202,7 +203,7 @@ class CoordinatorState:
 
     # -- weight-plane wire ledger ------------------------------------------
 
-    def _charge_wire(self, direction: str, nbytes: int) -> None:
+    def _charge_wire(self, direction: str, nbytes: int) -> None:  # guarded-by: self.cond
         """Record one weight-plane message (call with cond held)."""
         if direction == "down":
             self._dl_bytes += nbytes
@@ -213,7 +214,7 @@ class CoordinatorState:
         self.weight_bytes_cum += nbytes
         _WEIGHT_BYTES.inc(nbytes)
 
-    def _weight_ledger(self) -> dict:
+    def _weight_ledger(self) -> dict:  # guarded-by: self.cond
         """Close out this aggregation's weight-wire ledger: actual bytes
         both directions plus the codec-aware modelled exchange time (the
         critical path is one largest download + one largest upload, the
@@ -234,7 +235,7 @@ class CoordinatorState:
 
     # -- aggregation -------------------------------------------------------
 
-    def _maybe_aggregate_sync(self) -> None:
+    def _maybe_aggregate_sync(self) -> None:  # guarded-by: self.cond
         if self.done:
             return
         active = self.active_clients
@@ -277,7 +278,7 @@ class CoordinatorState:
         self.updates.clear()
         self.cond.notify_all()
 
-    def _maybe_aggregate_async(self) -> None:
+    def _maybe_aggregate_async(self) -> None:  # guarded-by: self.cond
         """Drain the buffer under the lock, but fold + evaluate OUTSIDE
         it — the whole point of async mode is that workers never wait,
         and a full-graph eval under the coordinator's one condition
@@ -408,9 +409,9 @@ class CoordinatorState:
                 return self._op_wait_pulled(header)
             if op == protocol.OP_UPDATE:
                 return self._op_update(conn_id, header, tensors)
-            if op == protocol.OP_STATS:
+            if op == protocol.OP_COORD_STATS:
                 return self._op_stats()
-            if op == protocol.OP_SHUTDOWN:
+            if op == protocol.OP_COORD_SHUTDOWN:
                 self.stop.set()
                 with self.cond:
                     self.cond.notify_all()

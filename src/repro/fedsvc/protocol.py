@@ -16,6 +16,10 @@ re-submitted round-trips bit-for-bit.
 Blocking semantics live server-side: ``get_model`` and ``wait_pulled``
 RPCs simply do not answer until their condition holds (each worker
 connection has a dedicated server thread, mirroring embed_server).
+
+Opcodes 16–31 belong to this plane; repro-lint (family WP) checks the
+``build_body``/``parse_body`` layout and the pinned registry in
+:mod:`repro.analysis.rules_wire` — keep both in sync when renumbering.
 """
 
 from __future__ import annotations
@@ -35,8 +39,8 @@ OP_GET_MODEL = 17    # blocking in sync mode: current global model
 OP_PULLED = 18       # sync: this worker's clients filled their caches
 OP_WAIT_PULLED = 19  # sync: block until every active client pulled
 OP_UPDATE = 20       # submit one client's trained params / async delta
-OP_STATS = 21        # coordinator telemetry snapshot (JSON)
-OP_SHUTDOWN = 22     # stop the service
+OP_COORD_STATS = 21        # coordinator telemetry snapshot (JSON)
+OP_COORD_SHUTDOWN = 22     # stop the service
 
 _U32 = struct.Struct("<I")
 
@@ -173,12 +177,12 @@ class CoordinatorClient:
         return h
 
     def stats(self) -> dict:
-        h, _ = self._rpc(OP_STATS, {})
+        h, _ = self._rpc(OP_COORD_STATS, {})
         return h
 
     def shutdown(self) -> None:
         try:
-            self._rpc(OP_SHUTDOWN, {})
+            self._rpc(OP_COORD_SHUTDOWN, {})
         except (ConnectionError, OSError, RuntimeError):
             pass
         self.close()

@@ -91,7 +91,8 @@ class QueryBatcher:
         # was, and a live per-lane depth gauge for scrapes
         _OCCUPANCY.observe(len(q))
         for d, lane in self._queues.items():
-            REGISTRY.gauge(f"gnnserve.lane_depth.d{d}").set(len(lane))
+            # bounded by model depth (≤ a handful of lanes)
+            REGISTRY.gauge(f"gnnserve.lane_depth.d{d}").set(len(lane))  # repro-lint: disable=TL001
         take = [q.popleft() for _ in range(min(self.batch_size, len(q)))]
         t_step = self.clock()
         for t in take:
@@ -115,7 +116,8 @@ class QueryBatcher:
                 self.exits_by_depth[depth] = \
                     self.exits_by_depth.get(depth, 0) + 1
                 _SERVED.inc()
-                REGISTRY.counter(f"gnnserve.exits.d{depth}").inc()
+                # bounded by model depth (≤ a handful of exit lanes)
+                REGISTRY.counter(f"gnnserve.exits.d{depth}").inc()  # repro-lint: disable=TL001
                 out.append(res)
             else:                    # escalate to the next schedule depth
                 nxt = sched[sched.index(depth) + 1]

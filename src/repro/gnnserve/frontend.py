@@ -30,12 +30,13 @@ _PREDICTS = REGISTRY.counter("gnnserve.predict_rpcs")
 
 class _FrontState:
     def __init__(self, plane: ServingPlane, *, poll_s: float = 0.005):
-        self.plane = plane
+        self.plane = plane                     # guarded-by: self.cond
         self.poll_s = poll_s
         self.lock = threading.Lock()
         self.cond = threading.Condition(self.lock)
         self.stop = threading.Event()
-        self.results: dict[int, object] = {}   # rid -> ServedResult
+        self.results: dict[int, object] = {}   # guarded-by: self.cond
+        # (results maps rid -> ServedResult; cond shares self.lock)
 
     # -- driver --------------------------------------------------------------
 
@@ -76,7 +77,7 @@ class _FrontState:
                     stats = self.plane.stats()
                     stats["metrics"] = REGISTRY.snapshot("gnnserve.")
                     return wire.build_ok(wire.build_stats_payload(stats))
-            if op == wire.OP_SHUTDOWN:
+            if op == wire.OP_EMBED_SHUTDOWN:
                 self.stop.set()
                 with self.cond:
                     self.cond.notify_all()

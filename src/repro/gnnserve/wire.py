@@ -3,7 +3,7 @@
 Reuses the exchange plane's length-prefixed frames, status bytes and
 struct helpers; the serving opcodes live at 32+ so the two dispatch
 tables can never collide (the embedding plane owns 1..15, the federated
-control plane 16..31).  ``OP_SHUTDOWN`` is shared with the exchange
+control plane 16..31).  ``OP_EMBED_SHUTDOWN`` is shared with the exchange
 plane — same semantics, same byte.
 
     OP_PREDICT  request:  u8 op | u64 n | n×i64 vids | n×f32 thresholds
@@ -11,6 +11,10 @@ plane — same semantics, same byte.
                                | n×i32 exit depths
     OP_SSTATS   request:  u8 op
                 response: ok | UTF-8 JSON stats blob
+
+Opcodes 32–47 belong to this plane; repro-lint (family WP) verifies the
+payload layouts against their parsers and the pinned registry in
+:mod:`repro.analysis.rules_wire`.
 """
 
 from __future__ import annotations
@@ -20,7 +24,7 @@ import json
 import numpy as np
 
 from repro.exchange.wire import (  # noqa: F401  (re-exported for frontend)
-    _U8, _U64, OP_SHUTDOWN, build_err, build_ok, parse_response,
+    _U8, _U64, OP_EMBED_SHUTDOWN, build_err, build_ok, parse_response,
     recv_frame, send_frame,
 )
 
@@ -40,7 +44,7 @@ def build_sstats() -> bytes:
 
 
 def build_shutdown() -> bytes:
-    return _U8.pack(OP_SHUTDOWN)
+    return _U8.pack(OP_EMBED_SHUTDOWN)
 
 
 def parse_serve_request(body: bytes) -> tuple[int, dict]:
@@ -52,7 +56,7 @@ def parse_serve_request(body: bytes) -> tuple[int, dict]:
         vids = np.frombuffer(view, np.int64, n, offset=off)
         thr = np.frombuffer(view, np.float32, n, offset=off + 8 * n)
         return op, {"vids": vids, "thresholds": thr}
-    if op in (OP_SSTATS, OP_SHUTDOWN):
+    if op in (OP_SSTATS, OP_EMBED_SHUTDOWN):
         return op, {}
     raise ValueError(f"unknown serving opcode {op}")
 

@@ -13,10 +13,10 @@ This is the TPU-native replacement for the generic jnp decode path;
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 
@@ -28,7 +28,7 @@ def _kernel(q_ref, k_ref, v_ref, pos_ref, valid_ref, qpos_ref, out_ref,
     k = k_ref[0, 0].astype(jnp.float32)                  # (T, dh)
     v = v_ref[0, 0].astype(jnp.float32)
     dh = q.shape[-1]
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / np.sqrt(dh)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / math.sqrt(dh)
     qp = qpos_ref[0, 0]
     pos = pos_ref[0, :]
     ok = valid_ref[0, :] & (pos <= qp) & (pos > qp - window)

@@ -46,7 +46,7 @@ from repro.obsv.trace import TRACE
 _REQS = REGISTRY.counter("embed.requests")
 _OP_SPAN = {wire.OP_REGISTER: "embed.register", wire.OP_WRITE: "embed.write",
             wire.OP_GATHER: "embed.gather", wire.OP_VGATHER: "embed.vgather",
-            wire.OP_STATS: "embed.stats"}
+            wire.OP_EMBED_STATS: "embed.stats"}
 
 
 class _ServerState:
@@ -54,7 +54,7 @@ class _ServerState:
 
     def __init__(self, num_layers: int, hidden: int, *,
                  device_tables: bool = False):
-        self.store = EmbeddingServer(num_layers, hidden,
+        self.store = EmbeddingServer(num_layers, hidden,    # guarded-by: self.lock
                                      device_tables=device_tables)
         self.lock = threading.Lock()
         self.stop = threading.Event()
@@ -69,7 +69,8 @@ class _ServerState:
         except Exception as e:                              # malformed frame
             return wire.build_err(f"bad request: {type(e).__name__}: {e}")
         _REQS.inc()
-        with TRACE.span(_OP_SPAN.get(op, "embed.op")):
+        # bounded: every value in _OP_SPAN is a literal span name
+        with TRACE.span(_OP_SPAN.get(op, "embed.op")):  # repro-lint: disable=TL001
             return self._dispatch(op, req)
 
     def _dispatch(self, op: int, req: dict) -> bytes:
@@ -84,13 +85,13 @@ class _ServerState:
                 return self._handle_gather(req)
             if op == wire.OP_VGATHER:
                 return self._handle_vgather(req)
-            if op == wire.OP_STATS:
+            if op == wire.OP_EMBED_STATS:
                 with self.lock:
                     payload = wire.build_stats_payload(
                         self.store.L, self.store.hidden,
                         len(self.store._row), self.store.memory_bytes())
                 return wire.build_ok(payload)
-            if op == wire.OP_SHUTDOWN:
+            if op == wire.OP_EMBED_SHUTDOWN:
                 self.stop.set()
                 return wire.build_ok()
             return wire.build_err(f"unknown opcode {op}")
@@ -99,11 +100,14 @@ class _ServerState:
 
     def _handle_write(self, req: dict) -> bytes:
         codec, gids = req["codec"], req["global_ids"]
-        n, hidden = len(gids), self.store.hidden
-        if req["num_blocks"] != self.store.L - 1:
+        with self.lock:     # geometry reads; decode work stays unlocked
+            hidden, num_layers = self.store.hidden, self.store.L
+            on_device = self.store.device_tables
+        n = len(gids)
+        if req["num_blocks"] != num_layers - 1:
             return wire.build_err(
                 f"write carries {req['num_blocks']} layer blocks, server "
-                f"stores {self.store.L - 1}")
+                f"stores {num_layers - 1}")
         cdc = get_codec(codec)
         block = wire.payload_nbytes(codec, n, hidden)
         buf, values = req["payload"], []
@@ -112,7 +116,7 @@ class _ServerState:
                 f"write payload is {len(buf)} B, expected "
                 f"{block * req['num_blocks']} B "
                 f"({req['num_blocks']}×{block})")
-        fused = codec == "int8" and self.store.device_tables
+        fused = codec == "int8" and on_device
         for l in range(req["num_blocks"]):
             payload = wire.decode_block(codec, buf[l * block:(l + 1) * block],
                                         n, hidden)
@@ -133,16 +137,21 @@ class _ServerState:
     def _handle_gather(self, req: dict) -> bytes:
         codec, gids = req["codec"], req["global_ids"]
         cdc = get_codec(codec)
-        if codec == "int8" and self.store.device_tables:
-            # fused gather+encode on the resident table; the device→host
-            # crossing happens once, inside encode_block's tobytes
-            with self.lock:
-                payloads = self.store.gather_quantized(gids, req["layers"])
-            blocks = [wire.encode_block(codec, p) for p in payloads]
-            return wire.build_ok(b"".join(blocks))
         with self.lock:
-            rows = self.store.gather(gids, req["layers"])
-        blocks = [wire.encode_block(codec, cdc.encode(r)) for r in rows]
+            if codec == "int8" and self.store.device_tables:
+                # fused gather+encode on the resident table; the
+                # device→host crossing happens once, inside
+                # encode_block's tobytes
+                payloads = self.store.gather_quantized(gids, req["layers"])
+                rows = None
+            else:
+                payloads = None
+                rows = self.store.gather(gids, req["layers"])
+        # gather returns fresh copies, so encoding runs unlocked
+        if payloads is not None:
+            blocks = [wire.encode_block(codec, p) for p in payloads]
+        else:
+            blocks = [wire.encode_block(codec, cdc.encode(r)) for r in rows]
         return wire.build_ok(b"".join(blocks))
 
     def _handle_vgather(self, req: dict) -> bytes:

@@ -4,7 +4,7 @@ Trains a federated run from the shared RunConfig flags (so the served
 model is pinned by the same argv contract as ``fedrun``), exports the
 trained parameters + final-epoch boundary embeddings into the serving
 plane (:meth:`FederatedGNNTrainer.export_for_serving`), and answers
-``OP_PREDICT`` queries over TCP until an ``OP_SHUTDOWN`` frame arrives.
+``OP_PREDICT`` queries over TCP until an ``OP_EMBED_SHUTDOWN`` frame arrives.
 
     python -m repro.launch.gnn_serve --port 7060 \
         --graph reddit --scale 0.05 --graph-seed 3 \

@@ -1,0 +1,57 @@
+"""repro-lint CLI: ``python -m repro.launch.lint [--root DIR] [...]``.
+
+Pure-stdlib entry point for the analyzer in ``repro.analysis`` — safe
+to run in a bare CI container with no jax/numpy installed.
+
+Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="static analysis for wire-protocol, lock-discipline, "
+                    "JAX-hygiene, and telemetry invariants")
+    ap.add_argument("--root", default=".",
+                    help="tree to analyze (default: cwd)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule families to run "
+                         "(WP,LD,JX,TM,TL); default all")
+    ap.add_argument("--include-fixtures", action="store_true",
+                    help="also scan directories named 'fixtures' "
+                         "(deliberately broken test inputs)")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.root)
+    if not root.is_dir():
+        print(f"repro-lint: not a directory: {root}", file=sys.stderr)
+        return 2
+
+    from repro.analysis import run_analysis
+    select = args.select.split(",") if args.select else None
+    result = run_analysis(root, select=select,
+                          exclude_fixtures=not args.include_fixtures)
+
+    if args.format == "json":
+        print(json.dumps(
+            {"findings": [f.to_json() for f in result.findings],
+             "stats": result.stats}, indent=2, sort_keys=True))
+    else:
+        for f in result.findings:
+            print(f.render())
+        n = len(result.findings)
+        print(f"repro-lint: {n} finding{'s' if n != 1 else ''} in "
+              f"{result.stats['files_scanned']} files")
+    return 0 if result.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

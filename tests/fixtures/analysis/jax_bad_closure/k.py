@@ -1,0 +1,13 @@
+"""Bad fixture: a traced inner function closes over a shape-derived
+python int → JX003 (recompiles for every distinct size)."""
+import jax
+import jax.numpy as jnp
+
+
+def gather_all(table, ids):
+    n = len(ids)
+
+    def _inner(t):
+        return jnp.take(t, jnp.arange(n), axis=0)
+
+    return jax.jit(_inner)(table)

@@ -1,0 +1,9 @@
+"""Bad fixture: .item() and float() on traced values → JX002."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def loss(x):
+    m = jnp.mean(x)
+    return float(m.item())

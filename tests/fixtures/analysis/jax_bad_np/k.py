@@ -1,0 +1,8 @@
+"""Bad fixture: host-numpy call inside a jitted function → JX001."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def scale(x):
+    return x * np.sqrt(np.asarray(x).sum())

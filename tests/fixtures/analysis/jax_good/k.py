@@ -1,0 +1,14 @@
+"""Good fixture: jitted code sticks to jnp, no host syncs, sizes are
+parameters rather than closure captures."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def scale(x, s):
+    return x * s
+
+
+def step(x):
+    y = scale(x, jnp.float32(2.0))
+    return jnp.sum(y)

@@ -1,0 +1,9 @@
+"""Bad fixture: guarded-by names a lock attribute that does not exist
+on the class → LD004."""
+import threading
+
+
+class Server:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.items = []          # guarded-by: self.mutex

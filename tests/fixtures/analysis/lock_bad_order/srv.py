@@ -1,0 +1,22 @@
+"""Bad fixture: lock l1 is taken before l2 on one path (through a
+helper call) and l2 before l1 on another → LD003 cycle."""
+import threading
+
+
+class Server:
+    def __init__(self):
+        self.l1 = threading.Lock()
+        self.l2 = threading.Lock()
+
+    def one_then_two(self):
+        with self.l1:
+            self._grab_two()
+
+    def _grab_two(self):
+        with self.l2:
+            pass
+
+    def two_then_one(self):
+        with self.l2:
+            with self.l1:
+                pass

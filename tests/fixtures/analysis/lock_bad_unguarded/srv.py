@@ -1,0 +1,22 @@
+"""Bad fixture: reads a guarded field outside the lock → LD001.
+Mirrors the render_text bug pattern: snapshot under the lock, then a
+second read of the shared dict after releasing it."""
+import threading
+
+
+class Server:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.items = {}          # guarded-by: self.lock
+
+    def put(self, k, v):
+        with self.lock:
+            self.items[k] = v
+
+    def render(self):
+        with self.lock:
+            names = sorted(self.items)
+        lines = []
+        for n in names:
+            lines.append(f"{n} {self.items[n]}")     # unguarded re-read!
+        return "\n".join(lines)

@@ -1,0 +1,15 @@
+"""Bad fixture: Condition.wait with no predicate loop → LD002 (a bare
+wait misses wakeups and returns spuriously)."""
+import threading
+
+
+class Server:
+    def __init__(self):
+        self.cond = threading.Condition()
+        self.ready = False       # guarded-by: self.cond
+
+    def await_ready(self):
+        with self.cond:
+            if not self.ready:
+                self.cond.wait(1.0)      # no while loop!
+            return self.ready

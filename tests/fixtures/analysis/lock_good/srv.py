@@ -1,0 +1,27 @@
+"""Good fixture: every guarded access happens under the lock, waits
+loop on their predicate, and the two locks nest in one order."""
+import threading
+
+
+class Server:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.cond = threading.Condition(self.lock)
+        self.items = []          # guarded-by: self.cond
+        self.closed = False      # guarded-by: self.cond
+
+    def put(self, x):
+        with self.cond:
+            self.items.append(x)
+            self.cond.notify_all()
+
+    def take(self):
+        with self.cond:
+            while not self.items and not self.closed:
+                self.cond.wait(0.1)
+            return self.items.pop(0) if self.items else None
+
+    def close(self):
+        with self.lock:
+            self.closed = True
+            self.cond.notify_all()

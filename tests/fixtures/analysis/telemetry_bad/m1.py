@@ -1,0 +1,9 @@
+"""Bad fixture, module 1 of 2: dynamic metric name (TL001), name that
+breaks plane.noun_unit (TL002), and a metric m2 also registers (TL003)."""
+from repro.obsv.metrics import REGISTRY
+
+
+def record(op, v):
+    REGISTRY.counter(f"serve.ops.{op}").inc()           # TL001
+    REGISTRY.gauge("BadName").set(v)                    # TL002
+    REGISTRY.counter("serve.shared_total").inc()        # TL003 with m2

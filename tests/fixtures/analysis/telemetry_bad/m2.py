@@ -1,0 +1,6 @@
+"""Bad fixture, module 2 of 2: re-registers m1's serve.shared_total."""
+from repro.obsv.metrics import REGISTRY
+
+
+def record_more():
+    REGISTRY.counter("serve.shared_total").inc()

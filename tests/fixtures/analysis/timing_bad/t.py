@@ -1,0 +1,8 @@
+"""Bad fixture: wall-clock duration arithmetic → TM001."""
+import time
+
+
+def bench(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0

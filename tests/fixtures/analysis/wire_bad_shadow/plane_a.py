@@ -1,0 +1,2 @@
+"""Bad fixture, module 1 of 2: OP_PING defined here and in plane_b."""
+OP_PING = 1

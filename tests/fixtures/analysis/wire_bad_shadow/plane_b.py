@@ -1,0 +1,2 @@
+"""Bad fixture, module 2 of 2: re-defines plane_a's OP_PING → WP006."""
+OP_PING = 16

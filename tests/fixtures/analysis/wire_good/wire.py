@@ -1,0 +1,33 @@
+"""Good fixture: builder pack sequence matches parser unpack sequence."""
+import struct
+
+import numpy as np
+
+OP_PING = 1
+OP_DATA = 2
+
+_U8 = struct.Struct("<B")
+_U16 = struct.Struct("<H")
+_U64 = struct.Struct("<Q")
+
+
+def build_ping() -> bytes:
+    return _U8.pack(OP_PING)
+
+
+def build_data(seq: int, ids: np.ndarray) -> bytes:
+    return (_U8.pack(OP_DATA) + _U16.pack(seq)
+            + _U64.pack(len(ids)) + np.asarray(ids, np.int64).tobytes())
+
+
+def parse_request(body: bytes):
+    view = memoryview(body)
+    (op,) = _U8.unpack_from(view, 0)
+    if op == OP_PING:
+        return op, {}
+    if op == OP_DATA:
+        (seq,) = _U16.unpack_from(view, 1)
+        (n,) = _U64.unpack_from(view, 3)
+        ids = np.frombuffer(view[11:11 + 8 * n], np.int64)
+        return op, {"seq": seq, "ids": ids}
+    raise ValueError(f"unknown opcode {op}")

@@ -1,0 +1,370 @@
+"""Tests for repro-lint (``src/repro/analysis``).
+
+Three layers:
+
+1. fixture pairs — every rule fires on its bad fixture, every good
+   fixture is clean;
+2. mutation tests — textual copies of the three *real* wire modules
+   with one opcode value or one pack field changed must each produce a
+   finding (the acceptance criterion: the byte-layout checker provably
+   cross-validates every builder/parser pair);
+3. a meta-test that the live tree itself is clean, plus targeted
+   regressions for the fixes the analyzer drove (namespaced opcodes,
+   render_text bounds under the registry lock, embed-server store
+   access under its lock).
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis import rules_lock, rules_wire
+from repro.analysis.core import SourceFile
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = REPO_ROOT / "tests" / "fixtures" / "analysis"
+PLANES = {s.name: s for s in rules_wire.PLANES}
+
+
+def _fixture_rules(name: str) -> set[str]:
+    res = run_analysis(FIXTURES / name, exclude_fixtures=False)
+    return {f.rule for f in res.findings}
+
+
+# -- 1. fixture pairs ---------------------------------------------------------
+
+BAD_FIXTURES = [
+    ("wire_bad_layout", "WP005"),
+    ("wire_bad_shadow", "WP006"),
+    ("lock_bad_unguarded", "LD001"),
+    ("lock_bad_wait", "LD002"),
+    ("lock_bad_order", "LD003"),
+    ("lock_bad_annotation", "LD004"),
+    ("jax_bad_np", "JX001"),
+    ("jax_bad_item", "JX002"),
+    ("jax_bad_closure", "JX003"),
+    ("timing_bad", "TM001"),
+    ("telemetry_bad", "TL001"),
+]
+
+
+@pytest.mark.parametrize("name,rule", BAD_FIXTURES)
+def test_bad_fixture_flags_rule(name, rule):
+    assert rule in _fixture_rules(name)
+
+
+@pytest.mark.parametrize("name", ["wire_good", "lock_good", "jax_good"])
+def test_good_fixture_clean(name):
+    assert _fixture_rules(name) == set()
+
+
+def test_telemetry_bad_covers_all_three_rules():
+    assert {"TL001", "TL002", "TL003"} <= _fixture_rules("telemetry_bad")
+
+
+def test_suppression_comment(tmp_path):
+    bad = "import time\n\n\ndef f():\n    return time.time()\n"
+    (tmp_path / "a.py").write_text(bad)
+    assert {f.rule for f in run_analysis(tmp_path).findings} == {"TM001"}
+    (tmp_path / "a.py").write_text(bad.replace(
+        "return time.time()",
+        "return time.time()  # repro-lint: disable=TM001"))
+    assert run_analysis(tmp_path).clean
+    (tmp_path / "a.py").write_text(
+        "# repro-lint: disable-file=TM001\n" + bad)
+    assert run_analysis(tmp_path).clean
+
+
+# -- 2. mutation tests against the real wire modules --------------------------
+
+def _plane_findings(spec, text: str):
+    sf = SourceFile(REPO_ROOT / spec.wire_rel, spec.wire_rel, text)
+    parent = None
+    if spec.parent_rel:
+        p = REPO_ROOT / spec.parent_rel
+        parent = SourceFile(p, spec.parent_rel,
+                            p.read_text(encoding="utf-8"))
+    return rules_wire.check_plane(spec, sf, None, {}, parent_sf=parent)
+
+
+# functions whose byte layout the checker verifies; mutations outside
+# them (framing, response status, codec payload helpers) are covered by
+# the runtime round-trip tests instead
+_EXCLUDED_FNS = {"build_ok", "build_err", "parse_response"}
+
+
+def _verified_spans(text: str) -> list[tuple[int, int]]:
+    spans = []
+    for node in ast.parse(text).body:
+        if isinstance(node, ast.FunctionDef) \
+                and node.name not in _EXCLUDED_FNS \
+                and (node.name.startswith(("build_", "parse_"))
+                     or node.name == "_gid_bytes"):
+            spans.append((node.lineno, node.end_lineno))
+    return spans
+
+
+_STRUCT_CALL = re.compile(
+    r"(_U8|_U16|_U32|_U64|_STATS)\.(pack|unpack_from|unpack)\(")
+_STRUCT_PREF = ["_U16", "_U64", "_U8", "_U32", "_STATS"]
+_DTYPE_SWAPS = {"np.int64": "np.int32", "np.float32": "np.float64",
+                "np.int32": "np.int64"}
+_OPCODE_DEF = re.compile(r"^(OP_\w+) = (\d+)", re.M)
+
+
+def _mutations(spec, text: str):
+    """Yield (description, mutated_text): every opcode renumbered, and
+    every struct/dtype pack field in a verified function swapped."""
+    for m in _OPCODE_DEF.finditer(text):
+        name, value = m.group(1), int(m.group(2))
+        yield (f"{name} {value}->{value + 1}",
+               text[:m.start(2)] + str(value + 1) + text[m.end(2):])
+    avail = set(re.findall(r"^(_\w+) = struct\.Struct", text, re.M))
+    avail |= {n for n in _STRUCT_PREF
+              if re.search(rf"import.*\b{n}\b", text)}
+    lines = text.splitlines(True)
+    spans = _verified_spans(text)
+    for i, ln in enumerate(lines):
+        if not any(lo <= i + 1 <= hi for lo, hi in spans):
+            continue
+        for m in _STRUCT_CALL.finditer(ln):
+            orig = m.group(1)
+            swap = next((s for s in _STRUCT_PREF
+                         if s != orig and s in avail), None)
+            if swap is None:
+                continue
+            mut = lines[:]
+            mut[i] = ln[:m.start(1)] + swap + ln[m.start(1) + len(orig):]
+            yield (f"line {i + 1}: {orig}->{swap}", "".join(mut))
+        if "frombuffer" in ln or ".tobytes()" in ln \
+                or "asarray" in ln:
+            for old, new in _DTYPE_SWAPS.items():
+                if old in ln:
+                    mut = lines[:]
+                    mut[i] = ln.replace(old, new, 1)
+                    yield (f"line {i + 1}: {old}->{new}", "".join(mut))
+                    break
+
+
+@pytest.mark.parametrize("plane", sorted(PLANES))
+def test_wire_module_baseline_clean(plane):
+    spec = PLANES[plane]
+    text = (REPO_ROOT / spec.wire_rel).read_text(encoding="utf-8")
+    assert _plane_findings(spec, text) == []
+
+
+@pytest.mark.parametrize("plane", sorted(PLANES))
+def test_every_opcode_and_pack_field_mutation_caught(plane):
+    spec = PLANES[plane]
+    text = (REPO_ROOT / spec.wire_rel).read_text(encoding="utf-8")
+    missed, total = [], 0
+    for desc, mutated in _mutations(spec, text):
+        total += 1
+        if not _plane_findings(spec, mutated):
+            missed.append(desc)
+    assert total >= 3, f"mutation generator found too little in {plane}"
+    assert not missed, f"{plane}: undetected mutations: {missed}"
+
+
+def test_fedsvc_handwritten_layout_mutations():
+    """Field reorder, field drop, and field widening in build_body —
+    shapes the generic generator cannot produce with a single struct."""
+    spec = PLANES["fedsvc"]
+    text = (REPO_ROOT / spec.wire_rel).read_text(encoding="utf-8")
+    muts = [
+        text.replace(
+            "bytes([op_or_status]) + _U32.pack(len(blob)) + blob",
+            "bytes([op_or_status]) + blob + _U32.pack(len(blob))"),
+        text.replace(
+            "bytes([op_or_status]) + _U32.pack(len(blob))",
+            "bytes([op_or_status])"),
+        text.replace(
+            "bytes([op_or_status]) + _U32.pack(len(blob))",
+            "_U32.pack(op_or_status) + _U32.pack(len(blob))"),
+    ]
+    for mutated in muts:
+        assert mutated != text
+        assert _plane_findings(spec, mutated)
+
+
+def test_all_builder_parser_pairs_cross_validated():
+    """The WP family verifies every request opcode and payload pair of
+    all three planes — nothing silently skipped as unverifiable."""
+    res = run_analysis(REPO_ROOT, select=["WP"])
+    assert res.clean
+    pairs = set(res.stats["pairs_verified"])
+    assert {
+        "exchange:OP_REGISTER", "exchange:OP_WRITE", "exchange:OP_GATHER",
+        "exchange:OP_VGATHER", "exchange:OP_EMBED_STATS",
+        "exchange:OP_EMBED_SHUTDOWN", "exchange:build_stats_payload",
+        "exchange:build_tensors",
+        "fedsvc:build_body",
+        "gnnserve:OP_PREDICT", "gnnserve:OP_SSTATS",
+        "gnnserve:OP_EMBED_SHUTDOWN", "gnnserve:build_predict_payload",
+        "gnnserve:build_stats_payload",
+    } <= pairs
+
+
+# -- 3. live tree + regressions ----------------------------------------------
+
+def test_live_tree_clean():
+    res = run_analysis(REPO_ROOT)
+    assert res.findings == [], "\n".join(f.render() for f in res.findings)
+
+
+def test_cli_exit_zero_on_repo():
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.lint", "--format", "json"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = json.loads(proc.stdout)
+    assert out["findings"] == []
+    assert out["stats"]["files_scanned"] > 0
+
+
+@pytest.mark.parametrize("name,rule", BAD_FIXTURES)
+def test_cli_nonzero_on_bad_fixture(name, rule):
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.lint",
+         "--root", str(FIXTURES / name), "--include-fixtures",
+         "--format", "json"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    out = json.loads(proc.stdout)
+    assert any(f["rule"] == rule for f in out["findings"])
+    for f in out["findings"]:
+        assert set(f) == {"rule", "file", "line", "message", "hint"}
+
+
+def test_opcode_namespacing():
+    """Satellite: the three planes no longer export colliding OP_STATS /
+    OP_SHUTDOWN names, and all opcode values are globally unique."""
+    from repro.exchange import wire as xwire
+    from repro.fedsvc import protocol
+    from repro.gnnserve import wire as swire
+    for mod in (xwire, protocol):
+        assert not hasattr(mod, "OP_STATS")
+        assert not hasattr(mod, "OP_SHUTDOWN")
+    assert xwire.OP_EMBED_STATS == 4
+    assert xwire.OP_EMBED_SHUTDOWN == 5
+    assert protocol.OP_COORD_STATS == 21
+    assert protocol.OP_COORD_SHUTDOWN == 22
+    assert swire.OP_EMBED_SHUTDOWN is xwire.OP_EMBED_SHUTDOWN
+    values = []
+    for spec in rules_wire.PLANES:
+        values.extend(spec.opcodes.values())
+    assert len(values) == len(set(values))
+
+
+def test_lock_annotations_live_embed_server():
+    """The guarded-by annotations actually police embed_server: the
+    current module is clean, and an unguarded store read in new code
+    is flagged — proving the annotations are not vacuous."""
+    rel = "src/repro/launch/embed_server.py"
+    text = (REPO_ROOT / rel).read_text(encoding="utf-8")
+    sf = SourceFile(REPO_ROOT / rel, rel, text)
+    assert not {f.rule for f in rules_lock.check([sf], repo_mode=False)}
+    marker = "    def _handle_vgather"
+    probe = ("    def _probe(self):\n"
+             "        return self.store.hidden\n\n")
+    assert marker in text
+    sf = SourceFile(REPO_ROOT / rel, rel,
+                    text.replace(marker, probe + marker, 1))
+    assert "LD001" in {f.rule
+                       for f in rules_lock.check([sf], repo_mode=False)}
+
+
+def test_lock_annotations_live_coordinator():
+    rel = "src/repro/fedsvc/coordinator.py"
+    text = (REPO_ROOT / rel).read_text(encoding="utf-8")
+    marker = "    def _op_stats(self)"
+    probe = ("    def _probe(self):\n"
+             "        return self.round + len(self.updates)\n\n")
+    assert marker in text
+    sf = SourceFile(REPO_ROOT / rel, rel,
+                    text.replace(marker, probe + marker, 1))
+    findings = [f for f in rules_lock.check([sf], repo_mode=False)
+                if f.rule == "LD001"]
+    assert len(findings) >= 2          # self.round and self.updates
+
+
+def test_render_text_bounds_under_lock():
+    """Regression for the unguarded ``self._metrics[name]`` read:
+    render_text must stay consistent while other threads register
+    metrics."""
+    from repro.obsv.metrics import MetricsRegistry
+    reg = MetricsRegistry()
+    h = reg.histogram("t.lat_s", lo=1e-3, hi=10.0, factor=2.0)
+    h.observe(0.5)
+    stop = threading.Event()
+
+    def churn():
+        i = 0
+        while not stop.is_set():
+            reg.counter(f"t.c{i % 256}").inc()
+            i += 1
+
+    t = threading.Thread(target=churn, daemon=True)
+    t.start()
+    try:
+        for _ in range(100):
+            out = reg.render_text("t.")
+            assert "t.lat_s_count 1" in out
+            assert 't.lat_s_bucket{le="+Inf"} 1' in out
+    finally:
+        stop.set()
+        t.join(5.0)
+
+
+def test_embed_server_concurrent_write_gather():
+    """Regression for store-attribute reads outside the server lock:
+    concurrent writers and gatherers over one shard must neither crash
+    nor interleave torn rows."""
+    import numpy as np
+
+    from repro.exchange.socket_transport import TcpTransport
+    from repro.launch.embed_server import serve_in_thread
+
+    handle = serve_in_thread(3, 8)
+    try:
+        tr = TcpTransport(3, 8, [handle.address], codec="fp32")
+        gids = np.arange(16, dtype=np.int64)
+        tr.register(gids)
+        rows = np.tile(np.arange(16, dtype=np.float32)[:, None], (1, 8))
+        errs = []
+
+        def writer():
+            try:
+                for _ in range(10):
+                    tr2 = TcpTransport(3, 8, [handle.address],
+                                       codec="fp32")
+                    tr2.write(gids, [rows, rows])
+                    tr2.close()
+            except Exception as e:       # pragma: no cover
+                errs.append(e)
+
+        w = threading.Thread(target=writer, daemon=True)
+        tr.write(gids, [rows, rows])     # ensure data before gathers
+        w.start()
+        for _ in range(20):
+            got = tr.gather(gids, layers=[1, 2])
+            for block in got:
+                # every row is either all-k (written) — never torn
+                np.testing.assert_array_equal(block, rows)
+        w.join(10.0)
+        assert not errs
+        tr.close()
+    finally:
+        handle.stop()

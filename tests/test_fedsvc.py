@@ -203,8 +203,8 @@ def test_worker_dropout_mid_round():
         a.update({"round": 0, "client_id": 0, "weight": 1.0}, [LEAF + 1])
         assert state.round == 0                # still waiting on client 1
         b.close()                              # mid-round death
-        deadline = time.time() + 5.0
-        while state.round == 0 and time.time() < deadline:
+        deadline = time.monotonic() + 5.0
+        while state.round == 0 and time.monotonic() < deadline:
             time.sleep(0.05)
         assert state.round == 1                # aggregated without client 1
         assert state.history[0]["clients"] == [0]
@@ -494,8 +494,8 @@ def test_trainer_applies_delta_schedule():
 
 
 def _wait_for(predicate, timeout=5.0):
-    deadline = time.time() + timeout
-    while not predicate() and time.time() < deadline:
+    deadline = time.monotonic() + timeout
+    while not predicate() and time.monotonic() < deadline:
         time.sleep(0.05)
     assert predicate()
 
