@@ -1,8 +1,9 @@
-"""WP0xx — wire-protocol conformance across the three TCP planes.
+"""WP0xx — wire-protocol conformance across the four TCP planes.
 
 The embedding exchange (``exchange/wire.py``), the federated control
-plane (``fedsvc/protocol.py``) and the scoring frontend
-(``gnnserve/wire.py``) share one length-prefixed framing but own
+plane (``fedsvc/protocol.py``), the scoring frontend
+(``gnnserve/wire.py``) and the dynamic-graph barrier
+(``dyngraph/wire.py``) share one length-prefixed framing but own
 disjoint opcode ranges.  Nothing at runtime checks that the three
 dispatch tables stay disjoint, that every opcode has exactly one
 builder and one handler branch, or that a builder's ``struct`` pack
@@ -99,6 +100,19 @@ PLANES = (
         reserved=frozenset(),
         shared_handled=frozenset({"OP_EMBED_SHUTDOWN"}),
         parent_rel="src/repro/exchange/wire.py",
+    ),
+    PlaneSpec(
+        name="dyngraph",
+        wire_rel="src/repro/dyngraph/wire.py",
+        parser="parse_growth_request",
+        # the dispatch branch lives in the wire module's own parser;
+        # fedsvc's coordinator routes the whole 48..63 band there by
+        # range, without naming individual opcodes
+        handler_rel="src/repro/dyngraph/wire.py",
+        lo=48, hi=63,
+        opcodes={"OP_GROWTH": 48},
+        reserved=frozenset(),
+        shared_handled=frozenset(),
     ),
 )
 

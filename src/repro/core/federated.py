@@ -182,6 +182,7 @@ class FederatedGNNTrainer:
         shards: list[ClientShard | None] | None = None,
         only_clients: list[int] | None = None,
         eval_max_edges: int = 4_000_000,
+        growth=None,
     ):
         self.g = graph
         self.k = num_clients
@@ -210,6 +211,12 @@ class FederatedGNNTrainer:
             else sorted(int(c) for c in only_clients)
         self._prebuilt_shards = shards
         self.eval_max_edges = eval_max_edges
+        # dynamic-graph runtime (repro.dyngraph.GrowthRuntime-shaped):
+        # apply_growth() advances it between rounds and rebuilds every
+        # shard-derived structure when the graph jumps.
+        self.growth = growth
+        self._growth_round = 0        # round of the last graph jump
+        self._growth_accs_base = 0    # pre-jump accuracies to ignore (τ)
         if part is None:
             if getattr(graph, "is_store", False):
                 # out-of-core plane: single-pass streaming LDG instead
@@ -242,9 +249,72 @@ class FederatedGNNTrainer:
 
     def _setup(self) -> None:
         st = self.strategy
-        limit = 0 if not st.use_embeddings else st.retention_limit
         self.owned = list(range(self.k)) if self.only_clients is None \
             else self.only_clients
+        self._registered = np.zeros(0, np.int64)  # gids exchange knows
+        self._build_shard_state()
+        shards = self.shards
+
+        # remote-embedding exchange: transport (embedding server shard(s)
+        # behind modelled links) + one codec/delta-aware client per silo
+        from repro.exchange import ExchangeClient, make_transport
+        if st.shard_placement not in ("hash", "pull_frequency"):
+            raise ValueError(
+                f"unknown shard_placement {st.shard_placement!r}; "
+                "expected hash | pull_frequency")
+        if st.use_embeddings:
+            self.exchange = make_transport(
+                self.L, self.hidden, kind=st.transport,
+                num_shards=st.num_server_shards,
+                nets=self.shard_nets if self.shard_nets is not None
+                else self.net,
+                addrs=self.transport_addrs, codec=st.codec)
+            if st.shard_placement == "pull_frequency":
+                if not hasattr(self.exchange, "rebalance_by_pulls"):
+                    raise ValueError(
+                        "shard_placement='pull_frequency' needs the "
+                        "sharded in-process transport (num_server_shards "
+                        "> 1, transport != 'tcp'): "
+                        f"{type(self.exchange).__name__} cannot migrate "
+                        "rows")
+                self.exchange.track_pulls = True
+            self.ex_clients: list[ExchangeClient | None] = [
+                None if shards[ci] is None else
+                ExchangeClient(self.exchange, st.codec,
+                               delta_threshold=st.delta_threshold,
+                               error_feedback=st.error_feedback)
+                for ci in range(self.k)
+            ]
+        else:
+            self.exchange = None
+            self.ex_clients = [None] * self.k
+        self._register_shard_nodes()
+        self._build_client_state()
+        self._build_eval_state()
+
+        # model + jitted train step
+        self.params = gnn.init_gnn(jax.random.PRNGKey(self.seed), self.conv,
+                                   self.g.feat_dim, self.hidden,
+                                   self.g.num_classes, self.L)
+        opt = self.opt
+
+        def _step(params, opt_state, batch, features, caches, labels):
+            loss, grads = jax.value_and_grad(
+                functools.partial(gnn.loss_fn, conv=self.conv))(
+                    params, batch, features, caches, labels)
+            params, opt_state = opt.step(params, grads, opt_state)
+            return params, opt_state, loss
+
+        self._train_step = jax.jit(_step)
+        self._treedef = jax.tree_util.tree_structure(self.params)
+        self.acc_history: list[float] = []   # finished-round accuracies
+
+    def _build_shard_state(self) -> None:
+        """Everything derived from (graph, part): shards, reciprocal
+        push sets, push-row indices, prefetch sets.  Re-run after each
+        graph growth jump."""
+        st = self.strategy
+        limit = 0 if not st.use_embeddings else st.retention_limit
         if self._prebuilt_shards is not None:
             # prebuilt (mmap'd) shards: a worker never re-scans the
             # graph.  Score-based pruning still applies, shard-locally.
@@ -321,43 +391,30 @@ class FederatedGNNTrainer:
                 idx = np.arange(len(sh.pull_nodes))
             self.prefetch_sets[ci] = idx
 
-        # remote-embedding exchange: transport (embedding server shard(s)
-        # behind modelled links) + one codec/delta-aware client per silo
-        from repro.exchange import ExchangeClient, make_transport
-        if st.shard_placement not in ("hash", "pull_frequency"):
-            raise ValueError(
-                f"unknown shard_placement {st.shard_placement!r}; "
-                "expected hash | pull_frequency")
-        if st.use_embeddings:
-            self.exchange = make_transport(
-                self.L, self.hidden, kind=st.transport,
-                num_shards=st.num_server_shards,
-                nets=self.shard_nets if self.shard_nets is not None
-                else self.net,
-                addrs=self.transport_addrs, codec=st.codec)
-            if st.shard_placement == "pull_frequency":
-                if not hasattr(self.exchange, "rebalance_by_pulls"):
-                    raise ValueError(
-                        "shard_placement='pull_frequency' needs the "
-                        "sharded in-process transport (num_server_shards "
-                        "> 1, transport != 'tcp'): "
-                        f"{type(self.exchange).__name__} cannot migrate "
-                        "rows")
-                self.exchange.track_pulls = True
-            self.ex_clients: list[ExchangeClient | None] = [
-                None if shards[ci] is None else
-                ExchangeClient(self.exchange, st.codec,
-                               delta_threshold=st.delta_threshold,
-                               error_feedback=st.error_feedback)
-                for ci in range(self.k)
-            ]
-            for ci in self.owned:
-                self.exchange.register(shards[ci].pull_nodes)
-                self.exchange.register(shards[ci].push_nodes)
-        else:
-            self.exchange = None
-            self.ex_clients = [None] * self.k
+    def _register_shard_nodes(self) -> None:
+        """Register the owned shards' pull/push sets with the exchange.
 
+        Registration is idempotent server-side (the capacity-doubling
+        table keeps existing rows), so after a growth jump only the
+        genuinely new boundary vertices matter — those are counted into
+        the growth runtime's boundary-registration metric."""
+        if self.exchange is None:
+            return
+        fresh = 0
+        for ci in self.owned:
+            sh = self.shards[ci]
+            for gids in (sh.pull_nodes, sh.push_nodes):
+                if self.growth is not None and len(gids):
+                    fresh += len(np.setdiff1d(gids, self._registered))
+                    self._registered = np.union1d(self._registered, gids)
+                self.exchange.register(gids)
+        if self.growth is not None and fresh:
+            self.growth.record_boundary(fresh)
+
+    def _build_client_state(self) -> None:
+        """Per-client training state over the current shards: samplers,
+        device arrays, embedding caches."""
+        shards = self.shards
         self.samplers: list[NeighborSampler | None] = [None] * self.k
         self.shard_arrays: list[dict | None] = [None] * self.k
         self.feats = [None] * self.k
@@ -369,7 +426,14 @@ class FederatedGNNTrainer:
             self.shard_arrays[ci] = gnn.shard_to_arrays(sh)
             self.feats[ci] = jnp.asarray(sh.features, jnp.float32)
             self.labels[ci] = jnp.asarray(sh.labels, jnp.int32)
+        self._caches: list[list[jnp.ndarray] | None] = [
+            None if sh is None else
+            [jnp.zeros((max(1, sh.num_remote), self.hidden), jnp.float32)
+             for _ in range(self.L - 1)]
+            for sh in shards
+        ]
 
+    def _build_eval_state(self) -> None:
         # global eval graph (aggregation server's held-out test set):
         # full-neighbourhood forward over the whole graph — or, past
         # ``eval_max_edges``, over a seeded uniform vertex sample whose
@@ -392,28 +456,35 @@ class FederatedGNNTrainer:
             self.eval_arrays = None
             self.test_idx = None
 
-        # model + jitted train step
-        self.params = gnn.init_gnn(jax.random.PRNGKey(self.seed), self.conv,
-                                   self.g.feat_dim, self.hidden,
-                                   self.g.num_classes, self.L)
-        opt = self.opt
+    # -- dynamic graphs (repro.dyngraph) ---------------------------------------
 
-        def _step(params, opt_state, batch, features, caches, labels):
-            loss, grads = jax.value_and_grad(
-                functools.partial(gnn.loss_fn, conv=self.conv))(
-                    params, batch, features, caches, labels)
-            params, opt_state = opt.step(params, grads, opt_state)
-            return params, opt_state, loss
+    def apply_growth(self, epoch: int,
+                     round_idx: int | None = None) -> bool:
+        """Advance the growth runtime to ``epoch`` and, if the graph
+        jumped, swap in the merged view and rebuild every shard-derived
+        structure (shards, push sets, samplers, caches, eval sample).
+        Model params and the exchange survive — only the *new* boundary
+        vertices are registered (the server's capacity-doubling path).
+        ``round_idx`` stamps the jump so the plateau-τ schedule restarts
+        from it.  → True when anything changed."""
+        if self.growth is None:
+            return False
+        if not self.growth.advance_to(epoch, part=self.part):
+            return False
+        self.g = self.growth.graph
+        self.part = self.growth.part
+        if round_idx is not None:
+            self._growth_round = int(round_idx)
+            self._growth_accs_base = int(round_idx)
+        self._refresh_after_growth()
+        return True
 
-        self._train_step = jax.jit(_step)
-        self._caches: list[list[jnp.ndarray] | None] = [
-            None if sh is None else
-            [jnp.zeros((max(1, sh.num_remote), self.hidden), jnp.float32)
-             for _ in range(self.L - 1)]
-            for sh in shards
-        ]
-        self._treedef = jax.tree_util.tree_structure(self.params)
-        self.acc_history: list[float] = []   # finished-round accuracies
+    def _refresh_after_growth(self) -> None:
+        self._prebuilt_shards = None    # extracted pre-growth: stale
+        self._build_shard_state()
+        self._register_shard_nodes()
+        self._build_client_state()
+        self._build_eval_state()
 
     # -- params <-> leaves (fedsvc control plane) ------------------------------
 
@@ -431,10 +502,15 @@ class FederatedGNNTrainer:
 
     def set_round_tau(self, round_idx: int, accuracies=None) -> None:
         """Apply the adaptive-τ schedule (Strategy.delta_schedule) for
-        this round to every client's delta tracker."""
+        this round to every client's delta tracker.  After a graph
+        growth jump the schedule restarts from the jump round: linear
+        warm-up re-ramps, and the plateau detector only sees post-jump
+        accuracies (pre-jump plateaus don't count against a graph the
+        model has never trained on)."""
         tau = self.strategy.delta_for_round(
-            round_idx,
-            self.acc_history if accuracies is None else accuracies)
+            round_idx - self._growth_round,
+            list(self.acc_history if accuracies is None
+                 else accuracies)[self._growth_accs_base:])
         if tau is None:
             return
         for ex in self.ex_clients:
@@ -710,6 +786,8 @@ class FederatedGNNTrainer:
         stats: list[RoundStats] = []
         cum = 0.0
         for r in range(num_rounds):
+            if self.growth is not None:
+                self.apply_growth(self.growth.epoch_for_round(r), r)
             s = self.run_round(r, cum)
             cum = s.cum_time
             stats.append(s)

@@ -87,6 +87,14 @@ class Strategy:
     # unsampled workers skip straight to the next round's get_model.
     # None — every client participates every round (historical).
     sample_frac: Optional[float] = None
+    # -- dynamic graphs (repro.dyngraph) ------------------------------------
+    # restream: scoring used when growth events admit new vertices into
+    # the existing partition — "ldg" (capacity-penalised affinity) or
+    # "fennel" (α·γ·|P|^{γ−1} marginal-cost).  restream_passes: warm
+    # re-assignment passes over *all* vertices after each event (0 =
+    # admit-only, the single-pass incremental baseline).
+    restream: str = "ldg"
+    restream_passes: int = 0
 
     def delta_for_round(self, round_idx: int,
                         accuracies: Sequence[float] = ()) -> Optional[float]:
@@ -147,6 +155,10 @@ class Strategy:
             bits.append(f"prefetch_x={int(self.prefetch_frac * 100)}%")
         if self.overlap_push:
             bits.append("overlap")
+        if self.restream != "ldg":
+            bits.append(f"restream={self.restream}")
+        if self.restream_passes:
+            bits.append(f"repass={self.restream_passes}")
         return " ".join(bits)
 
 

@@ -1,0 +1,19 @@
+"""Dynamic-graph plane: delta segments, growth schedules, restreaming.
+
+See :mod:`repro.dyngraph.delta` (overlay + compaction),
+:mod:`repro.dyngraph.events` (seeded growth schedules),
+:mod:`repro.dyngraph.restream` (incremental re-partitioning) and
+:mod:`repro.dyngraph.runtime` (the per-run growth driver).
+"""
+
+from .delta import DeltaLog, GraphOverlay, Segment, compact
+from .events import GrowthSchedule
+from .restream import RestreamConfig, admit, edge_cut_stream, \
+    repartition, restream_pass
+from .runtime import GrowthRuntime
+
+__all__ = [
+    "DeltaLog", "GraphOverlay", "Segment", "compact",
+    "GrowthSchedule", "RestreamConfig", "admit", "edge_cut_stream",
+    "repartition", "restream_pass", "GrowthRuntime",
+]

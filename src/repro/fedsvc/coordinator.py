@@ -65,6 +65,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from repro.core.cost_model import NetworkModel
+from repro.dyngraph import wire as dyn_wire
 from repro.exchange import wire
 from repro.exchange.codec import decode_leaves, encode_leaves
 from repro.obsv import teleserve
@@ -92,11 +93,17 @@ class CoordinatorState:
                  sample_seed: int = 0,
                  init_leaves: Optional[Sequence[np.ndarray]] = None,
                  eval_fn: Optional[Callable[[list[np.ndarray]], float]] = None,
-                 net: NetworkModel | None = None):
+                 net: NetworkModel | None = None,
+                 growth=None):
         if mode not in ("sync", "async"):
             raise ValueError(f"unknown aggregation mode {mode!r}")
         if sample_frac is not None and not 0.0 < sample_frac <= 1.0:
             raise ValueError(f"sample_frac {sample_frac!r} not in (0, 1]")
+        if growth is not None and mode != "sync":
+            # growth epochs are keyed to the sync round index; async
+            # versions have no shared round boundary to apply deltas at
+            raise ValueError("dynamic-graph growth requires sync "
+                             "aggregation")
         self.num_clients = num_clients
         self.num_rounds = num_rounds          # sync: rounds; async: aggs
         self.mode = mode
@@ -107,6 +114,9 @@ class CoordinatorState:
         self.sample_seed = sample_seed
         self.eval_fn = eval_fn
         self.net = net or NetworkModel()
+        # growth schedule (anything with epoch_for_round) or None;
+        # immutable — read without the lock
+        self.growth = growth
 
         self.cond = threading.Condition()
         self.stop = threading.Event()
@@ -134,6 +144,9 @@ class CoordinatorState:
         # against it, and it tracks the worker's copy bit-identically
         self._served: dict[str, tuple[int, list[np.ndarray]]] = {}  # guarded-by: self.cond
         self._samples: dict[int, set[int]] = {}         # guarded-by: self.cond
+        # dynamic graphs: highest growth epoch each worker reported
+        # applied — the growth barrier predicate reads it
+        self.grown: dict[str, int] = {}                 # guarded-by: self.cond
         # weight-plane wire ledger (payload bytes of get_model responses
         # and update requests), per aggregation and cumulative
         self.weight_bytes_cum = 0                       # guarded-by: self.cond
@@ -353,6 +366,7 @@ class CoordinatorState:
             self._worker_conn.pop(worker, None)
             self.workers.pop(worker, None)
             self._served.pop(worker, None)    # re-join gets a full model
+            self.grown.pop(worker, None)      # re-join re-reports its epoch
             if self.mode == "sync":
                 # orphaned updates: a deregistered client's pending
                 # update must not survive into any aggregation — if all
@@ -394,6 +408,15 @@ class CoordinatorState:
         telemetry = teleserve.handle_telemetry(body)
         if telemetry is not None:
             return telemetry
+        # dynamic-graph band (48..63): dyngraph wire layout, exchange
+        # status replies — must not reach protocol.parse_body either
+        if body and dyn_wire.GROWTH_LO <= body[0] <= dyn_wire.GROWTH_HI:
+            try:
+                return self._op_growth(body)
+            except ConnectionError:
+                raise                  # let the conn loop tear down
+            except Exception as e:
+                return wire.build_err(f"{type(e).__name__}: {e}")
         try:
             op, header, tensors = protocol.parse_body(body)
         except Exception as e:
@@ -498,6 +521,11 @@ class CoordinatorState:
             head = {"round": self.round, "version": self.version,
                     "serial": self.serial, "done": self.done,
                     "accs": list(self.acc_history)}
+            if self.growth is not None:
+                # every worker of this round sees the same epoch, so
+                # they all check into the growth barrier (or all skip)
+                head["growth_epoch"] = int(
+                    self.growth.epoch_for_round(self.round))
             if self.sample_frac is not None and not self.done:
                 head["sampled"] = sorted(self._sampled(
                     self.round if self.mode == "sync" else self.version))
@@ -528,6 +556,27 @@ class CoordinatorState:
                 head["kind"] = "full"
             self._charge_wire("down", wire.tensors_nbytes(payload))
         return protocol.build_ok(head, payload)
+
+    def _op_growth(self, body: bytes) -> bytes:
+        """Growth barrier: a worker reports the growth epoch it just
+        applied locally; the reply is withheld until every registered
+        worker has applied that epoch, so no worker pulls embeddings
+        across a half-grown deployment (a boundary row registered by
+        one worker must exist before a neighbour's pull).  A dropped
+        worker leaves ``self.workers`` in :meth:`disconnect`, which
+        notifies the condition and lets the barrier re-evaluate."""
+        _, header = dyn_wire.parse_growth_request(body)
+        worker = str(header["worker_id"])
+        epoch = int(header["epoch"])
+        with self.cond, TRACE.span(
+                "coord.growth",
+                args={"round": int(header.get("round", -1)),
+                      "epoch": epoch}):
+            self.grown[worker] = max(epoch, self.grown.get(worker, 0))
+            self.cond.notify_all()
+            self._wait(lambda: all(self.grown.get(w, 0) >= epoch
+                                   for w in self.workers))
+        return wire.build_ok()
 
     def _op_pulled(self, header: dict) -> bytes:
         rnd = int(header["round"])

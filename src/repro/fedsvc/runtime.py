@@ -44,6 +44,12 @@ class RunConfig:
     seed: int = 0
     rounds: int = 2
     embed_addrs: list = dataclasses.field(default_factory=list)
+    #: dynamic graphs: a GrowthSchedule as a plain dict
+    #: (``GrowthSchedule.to_dict()`` — JSON-safe, so a RunConfig blob
+    #: still fully pins the deployment).  None = static graph.  Every
+    #: participant builds its own GrowthRuntime from it, so workers in
+    #: different processes grow identically without exchanging state.
+    growth: Optional[dict] = None
 
     # -- construction ------------------------------------------------------
 
@@ -93,6 +99,13 @@ class RunConfig:
                 for c in owned:
                     shards[c] = g.load_shard(c, self.num_clients,
                                              self.seed, limit)
+        growth = None
+        if self.growth:
+            from repro.dyngraph import GrowthRuntime, GrowthSchedule
+            growth = GrowthRuntime(
+                GrowthSchedule.from_dict(self.growth), g,
+                self.num_clients, method=st.restream,
+                passes=st.restream_passes, seed=self.seed)
         return FederatedGNNTrainer(
             g, self.num_clients, st,
             conv=self.conv, num_layers=self.num_layers,
@@ -100,7 +113,8 @@ class RunConfig:
             batch_size=self.batch_size,
             epochs_per_round=self.epochs_per_round, lr=self.lr,
             transport_addrs=addrs, seed=self.seed,
-            part=part, shards=shards, only_clients=only_clients)
+            part=part, shards=shards, only_clients=only_clients,
+            growth=growth)
 
     # -- (de)serialisation -------------------------------------------------
 
@@ -140,6 +154,10 @@ class RunConfig:
         ap.add_argument("--embed", action="append", default=[],
                         metavar="HOST:PORT", dest="embed_addrs",
                         help="embed_server shard address (repeatable)")
+        ap.add_argument("--growth", default=None, metavar="JSON",
+                        help="GrowthSchedule as JSON (repro.dyngraph): "
+                             "the run applies seeded growth events at "
+                             "round boundaries")
 
     @classmethod
     def from_args(cls, args) -> "RunConfig":
@@ -157,7 +175,9 @@ class RunConfig:
                    hidden=args.hidden, fanout=args.fanout,
                    batch_size=args.batch_size, epochs_per_round=args.epochs,
                    lr=args.lr, seed=args.seed, rounds=args.rounds,
-                   embed_addrs=list(args.embed_addrs))
+                   embed_addrs=list(args.embed_addrs),
+                   growth=json.loads(args.growth)
+                   if getattr(args, "growth", None) else None)
 
 
 class EvalHarness:
@@ -167,12 +187,23 @@ class EvalHarness:
 
     def __init__(self, cfg: RunConfig):
         self.trainer = cfg.build_trainer(embeddings=False)
+        self._evals = 0     # completed evaluations == closed sync rounds
 
     def init_leaves(self):
         return self.trainer.params_leaves()
 
     def evaluate_leaves(self, leaves) -> float:
-        return self.trainer.evaluate(self.trainer.leaves_to_params(leaves))
+        tr = self.trainer
+        if tr.growth is not None:
+            # sync aggregation evaluates exactly once per round, in
+            # round order: evaluation #r closes round r, whose graph
+            # carries epoch_for_round(r) — same jump the workers applied
+            # at the top of the round, so the held-out sample tracks the
+            # grown graph
+            tr.apply_growth(tr.growth.epoch_for_round(self._evals),
+                            self._evals)
+        self._evals += 1
+        return tr.evaluate(tr.leaves_to_params(leaves))
 
 
 def make_coordinator_state(cfg: RunConfig, *, harness: EvalHarness | None
@@ -185,6 +216,10 @@ def make_coordinator_state(cfg: RunConfig, *, harness: EvalHarness | None
     from .coordinator import CoordinatorState   # avoid import cycle
     st = cfg.build_strategy()
     harness = EvalHarness(cfg) if harness is None else harness
+    growth = None
+    if cfg.growth:
+        from repro.dyngraph import GrowthSchedule
+        growth = GrowthSchedule.from_dict(cfg.growth)
     return CoordinatorState(
         num_clients=cfg.num_clients, num_rounds=cfg.rounds,
         mode=st.aggregation, buffer_size=st.buffer_size,
@@ -192,4 +227,4 @@ def make_coordinator_state(cfg: RunConfig, *, harness: EvalHarness | None
         weight_codec=st.weight_codec,
         sample_frac=st.sample_frac, sample_seed=cfg.seed,
         init_leaves=harness.init_leaves(),
-        eval_fn=harness.evaluate_leaves, net=net)
+        eval_fn=harness.evaluate_leaves, net=net, growth=growth)

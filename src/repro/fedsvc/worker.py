@@ -68,6 +68,8 @@ _BARRIER_S = REGISTRY.histogram("worker.barrier_s")
 _ROUND_S = REGISTRY.histogram("worker.round_s")
 _ROUNDS = REGISTRY.counter("worker.rounds")
 
+from repro.dyngraph import wire as dyn_wire
+
 from .aggregation import leaf_add, leaf_sub
 from .protocol import CoordinatorClient
 from .runtime import RunConfig
@@ -237,6 +239,20 @@ class FedWorker:
                 return
             r = int(head["round"])
             TRACE.set_context(round=r, worker=self.worker_id)
+            # dynamic graphs: apply this round's growth epoch BEFORE the
+            # sampled-skip — every worker must check into the growth
+            # barrier (an unsampled worker skipping it would wedge the
+            # sampled workers waiting on its boundary registrations)
+            ge = int(head.get("growth_epoch", 0))
+            if ge > 0 and tr.growth is not None:
+                with TRACE.span("worker.growth", args={"epoch": ge}):
+                    tr.apply_growth(ge, r)
+                    dyn_wire.growth_rpc(
+                        client.sock,
+                        {"worker_id": self.worker_id, "round": r,
+                         "epoch": ge,
+                         "num_vertices": int(tr.g.num_vertices),
+                         "num_edges": int(tr.g.num_edges)})
             sampled = head.get("sampled")
             mine = self.client_ids if sampled is None else \
                 [c for c in self.client_ids if c in sampled]

@@ -1,0 +1,312 @@
+"""Dynamic-graph plane: overlay/compaction bit-identity, seeded growth
+schedules, restreaming quality, and growth parity between the in-process
+trainer and a multi-process fedsvc deployment."""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis.rules_wire import PLANES
+from repro.dyngraph import (DeltaLog, GraphOverlay, GrowthRuntime,
+                            GrowthSchedule, RestreamConfig, admit, compact,
+                            edge_cut_stream, repartition, restream_pass)
+from repro.dyngraph import wire as dyn_wire
+from repro.fedsvc.coordinator import serve_in_thread
+from repro.fedsvc.runtime import RunConfig, make_coordinator_state
+from repro.fedsvc.worker import FedWorker, run_in_thread
+from repro.graphstore import ldg_partition, open_store
+from repro.obsv.metrics import REGISTRY
+
+SCHED = GrowthSchedule(scale=9, seed=7, base_frac=0.5, num_events=4,
+                       num_classes=8, feat_dim=16)
+ARRAYS = ("indptr", "indices", "features", "labels", "train_mask")
+
+
+@pytest.fixture(scope="module")
+def grown(tmp_path_factory):
+    """Base store, the overlay grown through every event, and the
+    from-scratch build of the final graph."""
+    root = tmp_path_factory.mktemp("dyn")
+    base = SCHED.build_base(str(root / "base"))
+    ov = GraphOverlay(base)
+    for e in range(1, SCHED.num_events + 1):
+        ov.apply(*SCHED.event_batch(e))
+    full = SCHED.build_full(str(root / "full"))
+    return root, base, ov, full
+
+
+# -- overlay / compaction ------------------------------------------------------
+
+def test_overlay_matches_full_build(grown):
+    _, _, ov, full = grown
+    assert int(ov.num_vertices) == int(full.num_vertices)
+    assert int(ov.num_edges) == int(full.num_edges)
+    assert int(ov.num_classes) == int(full.num_classes)
+    for key in ARRAYS:
+        np.testing.assert_array_equal(np.asarray(getattr(ov, key)),
+                                      np.asarray(getattr(full, key)))
+
+
+def test_compaction_bit_identical_to_rebuild(grown):
+    root, _, ov, _ = grown
+    out = str(root / "compacted")
+    compact(ov, out, name="dyn_full")
+    for key in ARRAYS:
+        with open(os.path.join(out, f"{key}.npy"), "rb") as fa, \
+                open(str(root / "full" / f"{key}.npy"), "rb") as fb:
+            assert fa.read() == fb.read(), key
+    open_store(out).validate()
+
+
+def test_empty_overlay_is_passthrough(grown):
+    _, base, _, _ = grown
+    ov = GraphOverlay(base)
+    # no segments: the edge/node accessors are the base's own arrays
+    # (the empty-schedule run cannot diverge from the static run);
+    # indptr is recomputed but value-identical
+    assert ov.indices is base.indices
+    assert ov.features is base.features
+    assert ov.labels is base.labels
+    assert ov.train_mask is base.train_mask
+    np.testing.assert_array_equal(ov.indptr, np.asarray(base.indptr))
+    assert int(ov.num_vertices) == int(base.num_vertices)
+
+
+def test_delta_log_roundtrip(grown, tmp_path):
+    _, base, ov, _ = grown
+    log = DeltaLog(str(tmp_path))
+    for seg in ov.segments:
+        log.append(seg)
+    ov2 = DeltaLog(str(tmp_path)).load(base)
+    assert len(ov2.segments) == len(ov.segments)
+    for key in ("indptr", "indices"):
+        np.testing.assert_array_equal(np.asarray(getattr(ov2, key)),
+                                      np.asarray(getattr(ov, key)))
+
+
+# -- growth schedules ----------------------------------------------------------
+
+def test_schedule_geometry():
+    assert SCHED.frontier(0) == SCHED.base_vertices
+    assert SCHED.frontier(SCHED.num_events) == SCHED.num_vertices
+    fronts = [SCHED.frontier(e) for e in range(SCHED.num_events + 1)]
+    assert fronts == sorted(fronts)
+    assert SCHED.epoch_for_round(0) == 0
+    assert SCHED.epoch_for_round(SCHED.start_round) == 1
+    assert SCHED.epoch_for_round(10 ** 6) == SCHED.num_events
+
+
+def test_events_partition_the_edge_stream():
+    """Base + every event batch is exactly the full edge stream: no
+    edge is emitted twice or dropped between epochs."""
+    def pairs(chunks):
+        out = [s * np.int64(SCHED.num_vertices) + d for s, d in chunks]
+        return np.sort(np.concatenate(out)) if out else np.zeros(0)
+
+    full = pairs(SCHED.full_chunks())
+    split = [pairs(SCHED.base_chunks())]
+    split += [pairs([SCHED.event_edges(e)])
+              for e in range(1, SCHED.num_events + 1)]
+    np.testing.assert_array_equal(np.sort(np.concatenate(split)), full)
+
+
+def test_node_rows_are_frontier_independent():
+    whole = SCHED.node_rows(0, SCHED.num_vertices)
+    lo, hi = SCHED.base_vertices, SCHED.frontier(1)
+    band = SCHED.node_rows(lo, hi)
+    for key in ("features", "labels", "train_mask"):
+        np.testing.assert_array_equal(band[key], whole[key][lo:hi])
+
+
+def test_schedule_dict_roundtrip():
+    assert GrowthSchedule.from_dict(SCHED.to_dict()) == SCHED
+
+
+# -- restreaming ---------------------------------------------------------------
+
+def test_admit_extends_without_moving(grown):
+    _, base, ov, _ = grown
+    k, cfg = 4, RestreamConfig()
+    p0 = ldg_partition(base, k, seed=0)
+    out = admit(ov, p0, k, cfg)
+    assert len(out) == int(ov.num_vertices)
+    np.testing.assert_array_equal(out[:len(p0)], p0)
+    assert out.min() >= 0 and out.max() < k
+    cap = int(np.ceil(ov.num_vertices / k) * cfg.slack)
+    assert np.bincount(out, minlength=k).max() <= cap
+    np.testing.assert_array_equal(out, admit(ov, p0, k, cfg))
+
+
+def test_restream_pass_reduces_cut(grown):
+    _, base, ov, _ = grown
+    k = 4
+    cfg = dataclasses.replace(RestreamConfig(), passes=3)
+    p0 = admit(ov, ldg_partition(base, k, seed=0), k, cfg)
+    p1 = repartition(ov, ldg_partition(base, k, seed=0), k, cfg)
+    assert edge_cut_stream(ov, p1) < edge_cut_stream(ov, p0)
+    # a pass never unbalances past the slack cap, and the whole chain
+    # is deterministic in (graph, part, config)
+    cap = int(np.ceil(ov.num_vertices / k) * cfg.slack)
+    assert np.bincount(p1, minlength=k).max() <= cap
+    np.testing.assert_array_equal(
+        p1, repartition(ov, ldg_partition(base, k, seed=0), k, cfg))
+
+
+def test_repartition_is_admit_plus_passes(grown):
+    _, base, ov, _ = grown
+    k = 4
+    cfg = dataclasses.replace(RestreamConfig(), passes=2)
+    p0 = ldg_partition(base, k, seed=0)
+    manual = admit(ov, p0, k, cfg)
+    for _ in range(2):
+        manual = restream_pass(ov, manual, k, cfg)
+    np.testing.assert_array_equal(repartition(ov, p0, k, cfg), manual)
+
+
+def test_fennel_admission(grown):
+    _, base, ov, _ = grown
+    k = 4
+    cfg = RestreamConfig(method="fennel")
+    out = admit(ov, ldg_partition(base, k, seed=0), k, cfg)
+    assert out.min() >= 0 and out.max() < k
+    assert (np.bincount(out, minlength=k) > 0).all()
+
+
+# -- wire / opcode band --------------------------------------------------------
+
+def test_growth_wire_roundtrip():
+    header = {"worker_id": "w0", "round": 3, "epoch": 2,
+              "num_vertices": 512, "num_edges": 4096}
+    op, parsed = dyn_wire.parse_growth_request(
+        dyn_wire.build_growth(header))
+    assert op == dyn_wire.OP_GROWTH
+    assert parsed == header
+    with pytest.raises(ValueError):
+        dyn_wire.parse_growth_request(
+            bytes([dyn_wire.GROWTH_HI]) + b"\x00" * 8)
+
+
+def test_dyngraph_opcode_band_registered():
+    spec = {p.name: p for p in PLANES}["dyngraph"]
+    assert (spec.lo, spec.hi) == (48, 63)
+    assert spec.opcodes["OP_GROWTH"] == dyn_wire.OP_GROWTH
+    bands = sorted((p.lo, p.hi) for p in PLANES)
+    for (_, hi_a), (lo_b, _) in zip(bands, bands[1:]):
+        assert hi_a < lo_b, "opcode bands overlap"
+
+
+# -- growth runtime ------------------------------------------------------------
+
+def test_growth_runtime_advances_and_meters(grown):
+    _, base, _, _ = grown
+    rt = GrowthRuntime(SCHED, base, 4, passes=1)
+    p0 = ldg_partition(base, 4, seed=0)
+    assert rt.advance_to(2, part=p0)
+    assert rt.applied_epoch == 2
+    assert not rt.advance_to(2)            # idempotent
+    assert not rt.advance_to(1)            # never rewinds
+    assert int(rt.graph.num_vertices) == SCHED.frontier(2)
+    assert len(rt.part) == SCHED.frontier(2)
+    assert rt.advance_to(SCHED.num_events)
+    snap = REGISTRY.snapshot(prefix="dyngraph")
+    assert snap["dyngraph.segments"] >= 1
+    assert snap["dyngraph.edge_cut"] > 0
+
+
+# -- trainer integration -------------------------------------------------------
+
+T_SCHED = GrowthSchedule(scale=10, seed=7, base_frac=0.5, num_events=2,
+                         start_round=1, every_rounds=1, num_classes=8,
+                         feat_dim=16)
+T_KW = dict(num_clients=2, batch_size=64, epochs_per_round=2, seed=0,
+            strategy="D", rounds=4)
+
+
+@pytest.fixture(scope="module")
+def t_base(tmp_path_factory):
+    root = tmp_path_factory.mktemp("dyn_trainer")
+    T_SCHED.build_base(str(root / "base"))
+    return str(root / "base")
+
+
+def _accs(stats):
+    return [r.accuracy for r in stats]
+
+
+def test_trainer_empty_schedule_bit_identical(tmp_path):
+    """A growth-enabled run whose schedule has no events is the static
+    run, bit for bit."""
+    sched = dataclasses.replace(SCHED, num_events=0, base_frac=1.0)
+    sched.build_base(str(tmp_path / "g"))
+    kw = dict(T_KW, graph="store:" + str(tmp_path / "g"))
+    static = RunConfig(**kw).build_trainer()
+    h0 = static.train(3)
+    dyn = RunConfig(growth=sched.to_dict(), **kw).build_trainer()
+    h1 = dyn.train(3)
+    assert _accs(h0) == _accs(h1)
+    for a, b in zip(static.params_leaves(), dyn.params_leaves()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_growth_run(t_base):
+    tr = RunConfig(graph="store:" + t_base,
+                   growth=T_SCHED.to_dict(), **T_KW).build_trainer()
+    hist = tr.train(T_KW["rounds"])
+    assert tr.growth.applied_epoch == T_SCHED.num_events
+    assert int(tr.g.num_vertices) == T_SCHED.num_vertices
+    assert len(tr.part) == T_SCHED.num_vertices
+    # eval set is re-drawn over the grown graph, not the base prefix
+    assert len(tr.eval_gids) == T_SCHED.num_vertices
+    accs = _accs(hist)
+    assert len(accs) == T_KW["rounds"]
+    assert all(np.isfinite(a) for a in accs)
+
+
+# -- fedsvc deployments --------------------------------------------------------
+
+def _deploy(cfg, *, timeout=600):
+    state = make_coordinator_state(cfg)
+    with serve_in_thread(state) as coord:
+        workers = [FedWorker(cfg, [i], coord.address, worker_id=f"w{i}")
+                   for i in range(cfg.num_clients)]
+        threads = [run_in_thread(w) for w in workers]
+        assert coord.join(timeout=timeout)
+        for t in threads:
+            t.join(timeout=60)
+    return state, workers
+
+
+@pytest.mark.slow
+def test_fedsvc_empty_schedule_bit_identical(tmp_path):
+    sched = dataclasses.replace(SCHED, num_events=0, base_frac=1.0)
+    sched.build_base(str(tmp_path / "g"))
+    kw = dict(T_KW, graph="store:" + str(tmp_path / "g"))
+    s0, _ = _deploy(RunConfig(**kw))
+    s1, _ = _deploy(RunConfig(growth=sched.to_dict(), **kw))
+    assert s0.acc_history == s1.acc_history
+    for a, b in zip(s0.leaves, s1.leaves):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_fedsvc_growth_matches_in_process(t_base):
+    """Two worker processes growing independently under the coordinator
+    barrier reproduce the in-process dynamic trainer exactly."""
+    cfg = RunConfig(graph="store:" + t_base,
+                    growth=T_SCHED.to_dict(), **T_KW)
+    tr = cfg.build_trainer()
+    want = _accs(tr.train(cfg.rounds))
+    state, workers = _deploy(cfg)
+    assert state.acc_history == want
+    for w in workers:
+        assert int(w.trainer.g.num_vertices) == T_SCHED.num_vertices
+        assert w.trainer.growth.applied_epoch == T_SCHED.num_events
+
+
+def test_growth_requires_sync_mode(t_base):
+    cfg = RunConfig(graph="store:" + t_base, growth=T_SCHED.to_dict(),
+                    **dict(T_KW, overrides={"aggregation": "async"}))
+    with pytest.raises(ValueError, match="sync"):
+        make_coordinator_state(cfg)
